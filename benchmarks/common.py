@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def save_json(name: str, obj) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1, default=float))
+    return p
+
+
+def load_json(name: str):
+    p = RESULTS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.s * 1e6
+
+
+def fmt_table(headers, rows) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join(["---"] * len(headers)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)

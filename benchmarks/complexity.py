@@ -1,0 +1,54 @@
+"""§Complexity: measured communication bytes and per-epoch update cost vs
+|O| — the paper's claim is both are linear in the training-set size (for
+fixed small N, D, K)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+
+
+def main(full: bool = False):
+    sizes = [1500, 3000, 4500] if not full else [6000, 12000, 24000]
+    rows = []
+    for n_r in sizes:
+        cfg_d = synthetic_poi.POIDatasetConfig(
+            n_users=400, n_items=300, n_ratings=n_r, n_cities=10, seed=0
+        )
+        ds = synthetic_poi.generate(cfg_d)
+        gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+        W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+        M = graph.walk_propagation_matrix(W, gcfg)
+        K = 10
+        comm = graph.communication_bytes(W, D=3, K=K, n_ratings=len(ds.train))
+        cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=K,
+                            beta=0.1, gamma=0.01)
+        rng = np.random.default_rng(0)
+        state = dmf.init_state(cfg, rng)
+        import jax.numpy as jnp
+        Mj = jnp.asarray(M)
+        state, _ = dmf.train_epoch(state, Mj, ds.train, cfg, rng)  # warmup/jit
+        t0 = time.perf_counter()
+        state, _ = dmf.train_epoch(state, Mj, ds.train, cfg, rng)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "n_train": int(len(ds.train)),
+            "comm_bytes_per_epoch": int(comm),
+            "epoch_seconds": round(dt, 3),
+        })
+    # linearity check: bytes/|O| and sec/|O| roughly constant
+    ratios_b = [r["comm_bytes_per_epoch"] / r["n_train"] for r in rows]
+    ratios_t = [r["epoch_seconds"] / r["n_train"] for r in rows]
+    return {
+        "rows": rows,
+        "comm_linear": bool(max(ratios_b) < 2.5 * min(ratios_b)),
+        "compute_linear": bool(max(ratios_t) < 2.5 * min(ratios_t)),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(main(), indent=1))

@@ -1,0 +1,63 @@
+"""Kernel micro-bench: Pallas (interpret on CPU; compiled on TPU) vs the
+pure-jnp oracle — correctness deltas + call timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, K = 2048, 16
+    u, p, q = (jnp.asarray(rng.normal(size=(B, K)), jnp.float32) for _ in range(3))
+    r = jnp.asarray(rng.random(B), jnp.float32)
+    c = jnp.asarray(rng.random(B), jnp.float32)
+    f_k = lambda: ops.dmf_grads(u, p, q, r, c, alpha=0.1, beta=0.01, gamma=0.01)
+    f_r = lambda: ref.dmf_grads_ref(u, p, q, r, c, 0.1, 0.01, 0.01)
+    err = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(f_k(), f_r())
+    )
+    rows.append(("dmf_grads_kernel", _time(f_k), f"max_err={err:.2e}"))
+    rows.append(("dmf_grads_ref", _time(f_r), ""))
+
+    I, F = 512, 1024
+    M = jnp.asarray(rng.normal(size=(I, I)), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(I, F)), jnp.float32)
+    f_k = lambda: ops.gossip_mix_op(M, X)
+    f_r = lambda: ref.gossip_mix_ref(M, X)
+    err = float(jnp.abs(f_k() - f_r()).max())
+    rows.append(("gossip_mix_kernel", _time(f_k), f"max_err={err:.2e}"))
+    rows.append(("gossip_mix_ref", _time(f_r), ""))
+
+    I, J, K = 256, 1024, 16
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(J, K)), jnp.float32)
+    mask = jnp.asarray(rng.random((I, J)) < 0.05)
+    f_k = lambda: ops.recommend_topk(U, V, mask, 10)
+    f_r = lambda: ref.topk_scores_ref(U, V, mask, 10)
+    vk, ik = f_k()
+    vr, ir = f_r()
+    err = float(jnp.abs(vk - vr).max())
+    rows.append(("topk_scores_kernel", _time(f_k), f"max_err={err:.2e}"))
+    rows.append(("topk_scores_ref", _time(f_r), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, extra in main():
+        print(f"{name},{us:.0f},{extra}")

@@ -1,0 +1,285 @@
+"""Roofline analysis (deliverable g) — per (arch × shape), single-pod mesh.
+
+    compute term    = step FLOPs / chip / 197e12 (bf16 peak)
+    memory term     = HBM bytes / chip / 819e9
+    collective term = collective bytes / chip / 50e9 (ICI per link)
+
+Sources — and a measurement caveat that is itself a §Perf finding:
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+(scan) body ONCE. The outer layer scan is calibrated away by the dry-run's
+1-/2-period compiles, but the *inner* scans (blockwise-attention q/kv
+loops, the per-expert MoE loop, the chunked-CE loop) make HLO FLOPs/bytes
+undercount by up to ~40x (validated experimentally, see EXPERIMENTS.md
+§Perf/Finding-0). The compute and memory terms are therefore ANALYTIC —
+first-principles per-arch formulas below (the same napkin math the
+hillclimb loop uses) — while the collective term IS taken from the
+compiled HLO (corrected): no collective ops live inside the inner scans,
+so the outer-scan calibration fully covers them. Raw HLO numbers are kept
+in the JSON as diagnostics.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import registry
+from repro.models.config import INPUT_SHAPES
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+CHIPS = 256               # single-pod roofline
+N_DATA, N_MODEL = 16, 16
+
+
+# ---------------------------------------------------------------------------
+# parameter counts
+# ---------------------------------------------------------------------------
+def param_count(cfg) -> tuple[float, float]:
+    """(total params, active params per token)."""
+    d = cfg.d_model
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.n_codebooks:
+        emb = cfg.n_codebooks * cfg.vocab_size * d * 2
+    total = act = emb
+    n = cfg.n_periods
+    for spec in cfg.period:
+        if spec.kind in ("attn", "cross"):
+            if cfg.attn_type == "mla":
+                qin = cfg.q_lora_rank or d
+                a = (
+                    (d * cfg.q_lora_rank if cfg.q_lora_rank else 0)
+                    + qin * cfg.n_heads * (cfg.head_dim + cfg.rope_head_dim)
+                    + d * (cfg.kv_lora_rank + cfg.rope_head_dim)
+                    + cfg.kv_lora_rank * cfg.n_heads * (cfg.head_dim + cfg.v_head_dim)
+                    + cfg.n_heads * cfg.v_head_dim * d
+                )
+            else:
+                a = d * cfg.n_heads * cfg.head_dim * 2 + d * cfg.n_kv_heads * cfg.head_dim * 2
+            total += n * a
+            act += n * a
+        else:  # mamba
+            di = cfg.ssm_d_inner
+            cdim = di + 2 * cfg.ssm_n_groups * cfg.ssm_d_state
+            a = d * (2 * di + 2 * cfg.ssm_n_groups * cfg.ssm_d_state + cfg.ssm_n_heads)
+            a += cfg.ssm_conv_width * cdim + di * d
+            total += n * a
+            act += n * a
+        if spec.moe:
+            e = 3 * d * cfg.moe_d_ff
+            total += n * cfg.n_routed_experts * e
+            act += n * (cfg.moe_top_k + cfg.n_shared_experts) * e
+        elif cfg.d_ff:
+            total += n * 3 * d * cfg.d_ff
+            act += n * 3 * d * cfg.d_ff
+    return float(total), float(act)
+
+
+# ---------------------------------------------------------------------------
+# analytic step FLOPs (global, whole step)
+# ---------------------------------------------------------------------------
+def _attn_core_flops_fwd(cfg, B, S, causal_eff=1.0) -> float:
+    """QK^T + PV flops per full forward (all layers). causal_eff=1.0 models
+    the baseline blockwise schedule (masked upper triangle still computed);
+    0.5 is the triangular-schedule optimum."""
+    fl = 0.0
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            if cfg.attn_type == "mla":
+                hd = cfg.head_dim + cfg.rope_head_dim
+                vd = cfg.v_head_dim
+            else:
+                hd = cfg.head_dim
+                vd = cfg.v_head_dim
+            fl += cfg.n_periods * 2 * B * S * S * cfg.n_heads * (hd + vd) * causal_eff
+        elif spec.kind == "cross":
+            M = cfg.n_image_tokens
+            fl += cfg.n_periods * 2 * B * S * M * cfg.n_heads * (cfg.head_dim + cfg.v_head_dim)
+        else:  # SSD: intra-chunk (quadratic in chunk) + state path
+            H, P, N, Q = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_chunk
+            # y_diag ~ 2*B*S*Q*H*P + CB ~ 2*B*S*Q*N*H ; states/off ~ 6*B*S*H*P*N
+            fl += cfg.n_periods * B * S * H * (2 * Q * (P + N) + 6 * P * N)
+    return fl
+
+
+def _attn_decode_flops(cfg, B, S) -> float:
+    """Per-token attention/SSM flops against an S-long context."""
+    fl = 0.0
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            Se = min(S, spec.sliding_window) if spec.sliding_window else S
+            if cfg.attn_type == "mla":  # absorbed: scores in latent space
+                r = cfg.kv_lora_rank + cfg.rope_head_dim
+                fl += cfg.n_periods * B * cfg.n_heads * Se * (2 * r + 2 * cfg.kv_lora_rank)
+            else:
+                fl += cfg.n_periods * 2 * B * cfg.n_heads * Se * (cfg.head_dim + cfg.v_head_dim)
+        elif spec.kind == "cross":
+            M = cfg.n_image_tokens
+            fl += cfg.n_periods * 2 * B * cfg.n_heads * M * (cfg.head_dim + cfg.v_head_dim)
+        else:
+            H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state
+            fl += cfg.n_periods * 6 * B * H * P * N
+    return fl
+
+
+def analytic_flops(cfg, shape) -> dict:
+    _, active = param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    ce = 0.5 if getattr(cfg, "triangular_attention", False) else 1.0
+    if shape.kind == "train":
+        T = B * S
+        # fwd 2NT + remat-fwd 2NT + bwd 4NT = 8NT matmul + attn (fwd+remat+2*bwd)
+        mat = 8.0 * active * T
+        attn = _attn_core_flops_fwd(cfg, B, S, ce) * 4.0
+        useful = 6.0 * active * T + _attn_core_flops_fwd(cfg, B, S, 0.5) * 3.0
+    elif shape.kind == "prefill":
+        T = B * S
+        mat = 2.0 * active * T
+        attn = _attn_core_flops_fwd(cfg, B, S, ce)
+        useful = 2.0 * active * T + _attn_core_flops_fwd(cfg, B, S, 0.5)
+    else:
+        mat = 2.0 * active * B
+        attn = _attn_decode_flops(cfg, B, S)
+        useful = mat + attn
+    return {"total": mat + attn, "useful": useful, "matmul": mat, "attn": attn}
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM bytes per device
+# ---------------------------------------------------------------------------
+def kv_cache_bytes(cfg, B, S) -> float:
+    """Global decode-cache bytes (bf16)."""
+    by = 0.0
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            Se = min(S, spec.sliding_window) if spec.sliding_window else S
+            if cfg.attn_type == "mla":
+                by += cfg.n_periods * B * Se * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+            else:
+                by += cfg.n_periods * B * Se * cfg.n_kv_heads * (cfg.head_dim + cfg.v_head_dim) * 2
+        elif spec.kind == "cross":
+            by += cfg.n_periods * B * cfg.n_image_tokens * cfg.n_kv_heads * 2 * cfg.head_dim * 2
+        else:
+            by += cfg.n_periods * B * (
+                cfg.ssm_n_heads * cfg.ssm_head_dim * cfg.ssm_d_state * 4  # f32 state
+                + (cfg.ssm_conv_width - 1) * (cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_d_state) * 2
+            )
+    return by
+
+
+def analytic_bytes_per_device(cfg, shape, chips=CHIPS, n_data=N_DATA,
+                              n_model=N_MODEL) -> dict:
+    total_p, _ = param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    if shape.kind == "train":
+        T_loc = B * S / (chips / n_model)  # tokens per batch shard
+        p_loc = total_p / chips           # fsdp+tp sharded
+        # params: bf16 read (fwd+remat+bwd: 3x after per-layer all-gather),
+        # grads f32 w+r, master f32 r+w, adam m,v r+w
+        param_traffic = p_loc * (2 * 3 + 4 * 2 + 4 * 2 + 4 * 4)
+        # activations: residual stream saves w+r (remat boundary) + per-layer
+        # working set ~10 d-sized tensors streamed through HBM, /model shard
+        act_traffic = (T_loc * d * 2) * L / n_model * (2 + 10)
+        return {"total": param_traffic + act_traffic,
+                "params": param_traffic, "act": act_traffic}
+    if shape.kind == "prefill":
+        T_loc = B * S / (chips / n_model)
+        p_loc = total_p / chips
+        param_traffic = p_loc * 2
+        act_traffic = (T_loc * d * 2) * L / n_model * 8
+        cache = kv_cache_bytes(cfg, B, S) / chips
+        return {"total": param_traffic + act_traffic + cache,
+                "params": param_traffic, "act": act_traffic, "cache": cache}
+    # decode: weights read every token + full cache read
+    p_loc = total_p * 2 / chips           # bf16 weights, fsdp+tp resident
+    cache_loc = kv_cache_bytes(cfg, B, S) / chips
+    act = B / max(chips / n_model, 1) * d * L * 2 * 10
+    return {"total": p_loc + cache_loc + act,
+            "params": p_loc, "cache": cache_loc, "act": act}
+
+
+# ---------------------------------------------------------------------------
+# assembling the report
+# ---------------------------------------------------------------------------
+def analyze(rec: dict) -> dict:
+    cfg = registry.get_config(rec["arch"])
+    if rec.get("opt") == "tri":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, triangular_attention=True)
+    shape = INPUT_SHAPES[rec["shape"]]
+    n = rec["n_devices"]
+    n_model = 16
+    fl = analytic_flops(cfg, shape)
+    by = analytic_bytes_per_device(cfg, shape, chips=n, n_data=n // n_model,
+                                   n_model=n_model)
+    coll = rec.get(
+        "corrected_collective_bytes_per_device", rec["collective_bytes_per_device"]
+    )
+    coll_total = sum(coll.values())
+    t_compute = fl["total"] / n / PEAK_FLOPS
+    t_memory = by["total"] / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_p, active_p = param_count(cfg)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "sync": rec.get("sync", "allreduce"),
+        "params_total": total_p,
+        "params_active": active_p,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "flops_total": fl["total"],
+        "flops_useful": fl["useful"],
+        "useful_ratio": fl["useful"] / max(fl["total"], 1.0),
+        "bytes_per_device": by,
+        "step_lower_bound_s": bound,
+        "mfu_upper_bound": fl["useful"] / (n * PEAK_FLOPS) / max(bound, 1e-12),
+        "collective_by_op": coll,
+        "hlo_diag": {
+            "flops_per_device_raw": rec.get("hlo_flops_per_device"),
+            "flops_per_device_scan_corrected": rec.get("corrected_flops_per_device"),
+            "bytes_per_device_raw": rec.get("hlo_bytes_per_device"),
+        },
+    }
+
+
+def main(mesh_tag: str = "pod", sync: str = "allreduce"):
+    rows = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh_tag}__{sync}.json")):
+        rec = json.loads(p.read_text())
+        if "error" in rec or "skipped" in rec:
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def render(rows) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["shape"], r["arch"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['mfu_upper_bound']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else "pod"
+    sync = sys.argv[2] if len(sys.argv) > 2 else "allreduce"
+    rows = main(tag, sync)
+    print(render(rows))

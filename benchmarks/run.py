@@ -1,0 +1,150 @@
+"""Benchmark harness entry point — one section per paper table/figure plus
+the roofline report. Prints ``name,us_per_call,derived`` CSV lines and
+writes JSON artifacts to benchmarks/results/.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CI) sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only paper_tables,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"# --- {name} " + "-" * max(0, 60 - len(name)), flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import common
+
+    def want(name):
+        return only is None or name in only
+
+    if want("paper_tables"):
+        from benchmarks import paper_tables
+        _section("paper_tables (Tables 2 & 3)")
+        t0 = time.perf_counter()
+        res = paper_tables.main(full=args.full, seeds=(0, 1) if not args.full else (0, 1, 2))
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("paper_tables", res)
+        for ds, r in res.items():
+            claims = " ".join(f"{k}={v}" for k, v in r["claims"].items())
+            print(f"paper_tables_{ds},{us:.0f},{claims}")
+            for K, models in r["table"].items():
+                for m, ev in models.items():
+                    print(
+                        f"paper_tables_{ds}_K{K}_{m},0,"
+                        f"P@5={ev['P@5']:.4f};R@5={ev['R@5']:.4f};"
+                        f"P@10={ev['P@10']:.4f};R@10={ev['R@10']:.4f}"
+                    )
+
+    if want("convergence"):
+        from benchmarks import convergence
+        _section("convergence (Fig. 4)")
+        t0 = time.perf_counter()
+        res = convergence.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("convergence", res)
+        for ds, r in res.items():
+            print(
+                f"convergence_{ds},{us:.0f},converged={r['converged']};"
+                f"first={r['train_loss'][0]};last={r['train_loss'][-1]}"
+            )
+
+    if want("reg_sweep"):
+        from benchmarks import reg_sweep
+        _section("reg_sweep (Fig. 5)")
+        t0 = time.perf_counter()
+        res = reg_sweep.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("reg_sweep", res)
+        print(
+            f"reg_sweep,{us:.0f},best={res['best']};"
+            f"sensitive={res['spread_validates_sensitivity']}"
+        )
+
+    if want("walk_sweep"):
+        from benchmarks import walk_sweep
+        _section("walk_sweep (Fig. 6)")
+        t0 = time.perf_counter()
+        res = walk_sweep.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("walk_sweep", res)
+        for ds, r in res.items():
+            print(
+                f"walk_sweep_{ds},{us:.0f},"
+                + ";".join(f"D{d}={v}" for d, v in r["R@10_by_D"].items())
+                + f";stable_after_3={r['stable_after_3']}"
+            )
+
+    if want("complexity"):
+        from benchmarks import complexity
+        _section("complexity (paper §Complexity)")
+        t0 = time.perf_counter()
+        res = complexity.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("complexity", res)
+        print(
+            f"complexity,{us:.0f},comm_linear={res['comm_linear']};"
+            f"compute_linear={res['compute_linear']}"
+        )
+
+    if want("gossip_ablation"):
+        from benchmarks import gossip_ablation
+        _section("gossip_ablation (beyond-paper: DMF sync at LM scale)")
+        t0 = time.perf_counter()
+        res = gossip_ablation.main()
+        us = (time.perf_counter() - t0) * 1e6
+        common.save_json("gossip_ablation", res)
+        if "error" in res:
+            print(f"gossip_ablation,{us:.0f},ERROR")
+        else:
+            print(
+                f"gossip_ablation,{us:.0f},"
+                f"allreduce={res['allreduce']['last']};"
+                f"gossip_d1={res['gossip_d1']['last']};"
+                f"gossip_d2={res['gossip_d2']['last']};"
+                f"gap={res['gossip_minus_allreduce_final_loss']};"
+                f"consensus_err={res['gossip_d1']['consensus_err']}"
+            )
+
+    if want("perf_report"):
+        from benchmarks import perf_report
+        _section("perf_report (§Perf before/after)")
+        for line in perf_report.render(perf_report.main()).splitlines():
+            print(line)
+
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        _section("kernels (Pallas vs ref)")
+        for name, us, extra in kernels_bench.main():
+            print(f"{name},{us:.0f},{extra}")
+
+    if want("roofline"):
+        from benchmarks import roofline
+        _section("roofline (from dry-run artifacts)")
+        rows = roofline.main()
+        common.save_json("roofline", rows)
+        if not rows:
+            print("roofline,0,no dryrun artifacts — run "
+                  "`python -m repro.launch.dryrun --all` first")
+        for r in rows:
+            print(
+                f"roofline_{r['arch']}_{r['shape']},0,"
+                f"compute={r['t_compute_s']:.3e};memory={r['t_memory_s']:.3e};"
+                f"collective={r['t_collective_s']:.3e};dominant={r['dominant']};"
+                f"useful={r['useful_ratio']:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

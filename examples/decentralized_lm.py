@@ -1,0 +1,68 @@
+"""DMF-at-pod-scale example: train the same tiny LM with (a) centralized
+all-reduce DP and (b) the paper's gossip protocol (per-learner replicas,
+D-hop ring mixing, personal-parameter partition), and compare loss curves
+plus learner consensus.
+
+Needs >1 host device:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/decentralized_lm.py --steps 40
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import gossip as gossip_lib
+from repro.data.lm_pipeline import LMDataConfig, SyntheticLM
+from repro.launch.train import make_train_step
+from repro.models import config as mc
+from repro.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--walk-length", type=int, default=2)
+    args = ap.parse_args()
+
+    if len(jax.devices()) < 4:
+        raise SystemExit(
+            "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev // 2, 2), ("data", "model"))
+    cfg = mc.reduced(
+        registry.get_config("qwen1.5-4b"), n_kv_heads=2, vocab_size=256,
+        d_model=128, d_ff=256, n_heads=4, head_dim=32,
+    )
+    data = SyntheticLM(LMDataConfig(vocab_size=256, seq_len=64, batch_size=16))
+
+    curves = {}
+    for sync in ["allreduce", "gossip"]:
+        gcfg = gossip_lib.GossipConfig(
+            learner_axis="data", walk_length=args.walk_length)
+        step, init_fn, _ = make_train_step(
+            cfg, mesh, adamw(3e-3), sync=sync, gossip=gcfg)
+        state = init_fn(jax.random.PRNGKey(0))
+        losses = []
+        for i in range(args.steps):
+            b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+            if i % 10 == 0:
+                extra = (f" consensus_err={float(m['consensus_err']):.3f}"
+                         if "consensus_err" in m else "")
+                print(f"[{sync:9s}] step {i:3d} loss {losses[-1]:.4f}{extra}")
+        curves[sync] = losses
+
+    print("\nfinal loss: allreduce=%.4f gossip=%.4f" % (
+        curves["allreduce"][-1], curves["gossip"][-1]))
+    gap = curves["gossip"][-1] - curves["allreduce"][-1]
+    print(f"gossip-vs-centralized gap: {gap:+.4f} "
+          f"(paper's claim: decentralized training tracks centralized; "
+          f"collective traffic is neighbor-only collective-permutes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving example: batched POI recommendation requests against a trained
+DMF model, scored by the Pallas top-k kernel (kernels/topk_scores.py).
+
+Each "request" is a user id; the server gathers that learner's own factors
+(u_i, p^i + q^i) — in production these live on-device; here the simulation
+holds them in one process — and returns k unseen POIs.
+
+    PYTHONPATH=src python examples/poi_serving.py --requests 64 --k 10
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dmf, graph, metrics
+from repro.data import synthetic_poi
+from repro.kernels import ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--epochs", type=int, default=40)
+    args = ap.parse_args()
+
+    ds = synthetic_poi.foursquare_like(reduced=True)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    M = graph.walk_propagation_matrix(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+    print("training DMF ...")
+    res = dmf.fit(cfg, ds.train, M, epochs=args.epochs)
+
+    train_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    rng = np.random.default_rng(0)
+    batch_users = rng.integers(0, ds.n_users, args.requests)
+
+    # batched request: each user scores with their OWN item factors
+    U_batch = res.state.U[batch_users]                                 # (R, K)
+    V_batch = res.state.P[batch_users] + res.state.Q[batch_users]      # (R, J, K)
+    mask = jnp.asarray(train_mask[batch_users])
+
+    t0 = time.perf_counter()
+    hits = 0
+    test_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.test)
+    recs = []
+    for r in range(args.requests):  # per-learner serving (decentralized!)
+        vals, idx = ops.recommend_topk(
+            U_batch[r][None], V_batch[r], mask[r][None], args.k
+        )
+        recs.append(np.asarray(idx)[0])
+        hits += test_mask[batch_users[r], np.asarray(idx)[0]].sum()
+    dt = time.perf_counter() - t0
+    print(f"{args.requests} requests in {dt*1e3:.1f} ms "
+          f"({dt/args.requests*1e3:.2f} ms/req, interpret-mode kernel)")
+    print(f"P@{args.k} over requests: "
+          f"{hits / (args.requests * args.k):.4f}")
+    print("sample recommendation for user", int(batch_users[0]), ":", recs[0][:5])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: decentralized POI recommendation with DMF in ~40 lines.
+
+Builds a synthetic city-world, the geographic user graph (Eq. 2), the
+random-walk propagation matrix (Eqs. 3-4), trains DMF (Alg. 1) and prints
+P@k/R@k against centralized MF.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import baselines, dmf, graph
+from repro.data import synthetic_poi
+
+
+def main():
+    # 1. data — users/POIs clustered into cities, geographic coordinates
+    ds = synthetic_poi.foursquare_like(reduced=True)
+    print(f"users={ds.n_users} POIs={ds.n_items} "
+          f"train={len(ds.train)} test={len(ds.test)}")
+
+    # 2. the user adjacency graph from geography (same city, N nearest)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    M = graph.walk_propagation_matrix(W, gcfg)   # includes line-11 self term
+
+    # 3. decentralized training (vectorized Alg. 1)
+    cfg = dmf.DMFConfig(
+        n_users=ds.n_users, n_items=ds.n_items, dim=10,
+        alpha=0.1, beta=0.1, gamma=0.01, lr=0.1, neg_samples=3,
+    )
+    res = dmf.fit(cfg, ds.train, M, epochs=60, test=ds.test)
+    print(f"train loss {res.train_losses[0]:.4f} -> {res.train_losses[-1]:.4f}")
+
+    # 4. evaluate — and compare with centralized MF
+    ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
+    print("DMF:", {k: round(v, 4) for k, v in ev.items()})
+    mfc = baselines.MFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10)
+    st, _ = baselines.fit_mf(mfc, ds.train, epochs=60)
+    ev_mf = baselines.evaluate_mf(st, ds.train, ds.test, ds.n_users, ds.n_items)
+    print("MF :", {k: round(v, 4) for k, v in ev_mf.items()})
+    assert ev["R@10"] > ev_mf["R@10"], "DMF should beat centralized MF"
+    print("OK — decentralized beats centralized on locality-structured data")
+
+
+if __name__ == "__main__":
+    main()

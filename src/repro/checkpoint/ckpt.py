@@ -1,0 +1,93 @@
+"""Checkpointing: pytree <-> directory of .npy leaves + msgpack manifest.
+
+Sharding-aware on the read path: ``restore`` accepts an optional sharding
+tree and device_puts leaves accordingly (single-host; a multi-host variant
+would shard-read per process — out of scope for the CPU container, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+        out["/".join(keys)] = leaf
+    return out, treedef
+
+
+def save(path: str | pathlib.Path, tree, step: int | None = None) -> None:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fn = name.replace("/", "__") + ".npy"
+        raw = arr.dtype.kind not in "biufc"  # bf16/fp8: numpy stores as void
+        np.save(path / fn, arr.view(np.uint8) if raw else arr)
+        manifest["leaves"][name] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "raw": raw,
+        }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore(path: str | pathlib.Path, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    flat_like, treedef = _flatten(like)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh, _ = _flatten(shardings)
+    leaves = {}
+    for name in flat_like:
+        info = manifest["leaves"][name]
+        arr = np.load(path / info["file"])
+        if info.get("raw"):
+            import jax.numpy as jnp
+            dt = jnp.dtype(info["dtype"])
+            arr = arr.view(dt).reshape(info["shape"])
+        if flat_sh is not None:
+            arr = jax.device_put(arr, flat_sh[name])
+        leaves[name] = arr
+    # rebuild in treedef order
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for pathk, _leaf in flat:
+        keys = []
+        for p in pathk:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+        ordered.append(leaves["/".join(keys)])
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def latest_step(root: str | pathlib.Path) -> int | None:
+    root = pathlib.Path(root)
+    steps = [
+        int(p.name.split("_")[-1])
+        for p in root.glob("step_*")
+        if p.is_dir() and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,7 @@
+"""DMF on the Alipay-like dataset (Table 1 row 2: 5,996 users / 7,404 POIs /
+18,978 ratings / 298 cities)."""
+from repro.configs.dmf_foursquare import dmf_config  # noqa: F401 (same hypers)
+from repro.core.graph import GraphConfig
+
+GRAPH = GraphConfig(n_neighbors=2, walk_length=3, uniform_weights=True)
+DATASET = dict(kind="alipay", reduced_default=True)

@@ -1,0 +1,15 @@
+"""yi-34b-swa — sliding-window variant of yi-34b (window 8192), the
+dense-architecture carve-in for long_500k: decode attends to the last 8k
+positions via a ring-buffer cache (O(window) memory at 524k context).
+Not part of the assigned-10 list; selectable as --arch yi-34b-swa.
+"""
+import dataclasses
+
+from repro.configs.yi_34b import CONFIG as _BASE
+from repro.models.config import LayerSpec
+
+CONFIG = dataclasses.replace(
+    _BASE,
+    name="yi-34b-swa",
+    period=(LayerSpec(kind="attn", sliding_window=8192),),
+)

@@ -1,0 +1,150 @@
+"""Centralized baselines the paper compares against.
+
+* **MF** (Mnih & Salakhutdinov 2007): centralized least-square latent factor
+  model — the same objective as Eq. 1, trained with SGD and the same
+  unobserved-rating negative sampling as DMF (identical protocol, so the
+  comparison isolates the decentralization).
+* **BPR** (Rendle et al. 2009): pairwise-ranking latent factor model,
+  trained on (user, positive, sampled-negative) triples with the sigmoid
+  pairwise loss.
+* **GDMF / LDMF** are the γ→∞ / β→∞ special cases of DMF and live in
+  ``core.dmf`` (``mode="gdmf"|"ldmf"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MFConfig:
+    n_users: int
+    n_items: int
+    dim: int = 10
+    alpha: float = 0.1      # user regularizer
+    beta: float = 0.01      # item regularizer
+    lr: float = 0.1
+    neg_samples: int = 3
+    batch_size: int = 256
+    init_scale: float = 0.1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class MFState:
+    U: jnp.ndarray  # (I, K)
+    V: jnp.ndarray  # (J, K)
+
+
+def init_mf(cfg: MFConfig, rng: np.random.Generator | None = None) -> MFState:
+    rng = rng or np.random.default_rng(cfg.seed)
+    s = cfg.init_scale
+    return MFState(
+        U=jnp.asarray(rng.normal(0, s, (cfg.n_users, cfg.dim)), jnp.float32),
+        V=jnp.asarray(rng.normal(0, s, (cfg.n_items, cfg.dim)), jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def _mf_step(U, V, ui, vj, r, conf, cfg: MFConfig):
+    u, v = U[ui], V[vj]
+    err = conf * (r - jnp.sum(u * v, -1))
+    gu = -err[:, None] * v + cfg.alpha * u
+    gv = -err[:, None] * u + cfg.beta * v
+    loss = 0.5 * jnp.sum(conf * (r - jnp.sum(u * v, -1)) ** 2)
+    return U.at[ui].add(-cfg.lr * gu), V.at[vj].add(-cfg.lr * gv), loss
+
+
+def fit_mf(cfg: MFConfig, train: np.ndarray, epochs: int = 30, seed: int | None = None):
+    from repro.core.dmf import DMFConfig, sample_epoch  # shared sampling protocol
+
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    state = init_mf(cfg, rng)
+    scfg = DMFConfig(
+        n_users=cfg.n_users, n_items=cfg.n_items, dim=cfg.dim,
+        neg_samples=cfg.neg_samples, batch_size=cfg.batch_size,
+    )
+    U, V = state.U, state.V
+    losses = []
+    B = cfg.batch_size
+    for _ in range(epochs):
+        ui, vj, r, conf = sample_epoch(train, scfg, rng)
+        n = (len(ui) // B) * B
+        tot = 0.0
+        for s in range(0, n, B):
+            U, V, l = _mf_step(
+                U, V,
+                jnp.asarray(ui[s:s+B]), jnp.asarray(vj[s:s+B]),
+                jnp.asarray(r[s:s+B]), jnp.asarray(conf[s:s+B]), cfg,
+            )
+            tot += float(l)
+        losses.append(tot / max(n, 1))
+    return MFState(U, V), losses
+
+
+@dataclasses.dataclass(frozen=True)
+class BPRConfig:
+    n_users: int
+    n_items: int
+    dim: int = 10
+    reg: float = 0.01
+    lr: float = 0.05
+    batch_size: int = 256
+    init_scale: float = 0.1
+    seed: int = 0
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def _bpr_step(U, V, ui, vp, vn, cfg: BPRConfig):
+    u, xp, xn = U[ui], V[vp], V[vn]
+    diff = jnp.sum(u * (xp - xn), -1)
+    sig = jax.nn.sigmoid(-diff)             # d(-log σ(diff))/d(diff) = -σ(-diff)
+    loss = jnp.sum(jax.nn.softplus(-diff))
+    gu = -sig[:, None] * (xp - xn) + cfg.reg * u
+    gp = -sig[:, None] * u + cfg.reg * xp
+    gn = sig[:, None] * u + cfg.reg * xn
+    U = U.at[ui].add(-cfg.lr * gu)
+    V = V.at[vp].add(-cfg.lr * gp)
+    V = V.at[vn].add(-cfg.lr * gn)
+    return U, V, loss
+
+
+def fit_bpr(cfg: BPRConfig, train: np.ndarray, epochs: int = 30, seed: int | None = None):
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    s = cfg.init_scale
+    U = jnp.asarray(rng.normal(0, s, (cfg.n_users, cfg.dim)), jnp.float32)
+    V = jnp.asarray(rng.normal(0, s, (cfg.n_items, cfg.dim)), jnp.float32)
+    B = cfg.batch_size
+    losses = []
+    for _ in range(epochs):
+        perm = rng.permutation(len(train))
+        pos = train[perm]
+        neg = rng.integers(0, cfg.n_items, size=len(pos))
+        n = (len(pos) // B) * B
+        tot = 0.0
+        for st in range(0, n, B):
+            U, V, l = _bpr_step(
+                U, V,
+                jnp.asarray(pos[st:st+B, 0]), jnp.asarray(pos[st:st+B, 1]),
+                jnp.asarray(neg[st:st+B]), cfg,
+            )
+            tot += float(l)
+        losses.append(tot / max(n, 1))
+    return MFState(U, V), losses
+
+
+def mf_scores(state: MFState) -> np.ndarray:
+    return np.asarray(state.U @ state.V.T)
+
+
+def evaluate_mf(state: MFState, train, test, n_users, n_items, ks=(5, 10)):
+    sc = mf_scores(state)
+    train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
+    test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+    return metrics_lib.evaluate_ranking(sc, train_mask, test_mask, ks)

@@ -1,0 +1,119 @@
+"""DMF's decentralized protocol mapped onto a TPU pod (DESIGN.md §4).
+
+The paper's three mechanisms become, for pod-scale training:
+
+1. **Learners** — mesh coordinates along ``learner_axis`` ("data" for
+   per-shard learners, "pod" for one learner per pod). Every learner holds
+   its own model replica: parameters gain a leading learner dim L, sharded
+   over ``learner_axis`` (per-device memory equals plain DP).
+2. **Nearby-user communication + random walk** — after each local update,
+   the *global* parameter partition is mixed with a doubly-stochastic ring
+   weighting; ``walk_length`` (the paper's D) rounds of mixing apply Ŵ^D.
+   ``jnp.roll`` along the learner-sharded dim lowers to
+   ``collective-permute`` — neighbor-only traffic, never an all-reduce.
+3. **Global/local decomposition (p vs q^i)** — parameters matching
+   ``personal_predicate`` (default: norm scales and biases) are *never*
+   mixed: each learner keeps its personal copy, exactly like q^i_j in
+   Eq. 5. Everything else is the shared p.
+
+Gradient-exchange privacy note: as in the paper, only derived quantities of
+the shared partition cross learner boundaries; raw batches and personal
+parameters never do. (Mixing post-update parameters is gradient exchange
+plus a consensus term — the Nedic–Ozdaglar form the paper builds on.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    learner_axis: str = "data"       # mesh axis acting as the learner ring
+    walk_length: int = 2             # D — rounds of neighbor mixing per step
+    self_weight: float = 0.5         # ring mixing: self + left/right neighbors
+    personal_predicate: Callable | None = None   # path -> bool (True = q^i)
+
+
+def default_personal(path_str: str) -> bool:
+    """The q^i partition: per-learner norms/biases (cheap, personal)."""
+    leaf = path_str.split("/")[-1]
+    return leaf.startswith(("ln", "norm", "final_norm", "b", "gate")) or "norm" in leaf
+
+
+def _is_personal(cfg: GossipConfig, path) -> bool:
+    pred = cfg.personal_predicate or default_personal
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+    return pred("/".join(keys))
+
+
+def ring_mix(x: jnp.ndarray, cfg: GossipConfig) -> jnp.ndarray:
+    """One Ŵ-round: doubly-stochastic ring mixing along leading learner dim.
+
+    x: (L, ...). roll on the learner-sharded axis -> collective-permute.
+    """
+    w_self = cfg.self_weight
+    w_nbr = (1.0 - w_self) / 2.0
+    return (
+        w_self * x
+        + w_nbr * jnp.roll(x, 1, axis=0)
+        + w_nbr * jnp.roll(x, -1, axis=0)
+    ).astype(x.dtype)
+
+
+def mix_global(params, cfg: GossipConfig):
+    """Apply Ŵ^D to the global (p) partition; personal (q^i) untouched."""
+
+    def mix_leaf(path, x):
+        if _is_personal(cfg, path):
+            return x
+        for _ in range(cfg.walk_length):
+            x = ring_mix(x, cfg)
+        return x
+
+    return jax.tree_util.tree_map_with_path(mix_leaf, params)
+
+
+def stack_params(params, n_learners: int):
+    """Broadcast params to a leading learner dim (identical init, like DMF's
+    shared p initialization)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_learners, *x.shape)), params
+    )
+
+
+def stacked_specs(spec_tree, learner_axis: str):
+    """Prepend the learner axis to every logical spec tuple."""
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, str) or x is None for x in s
+    )
+    # learner axis resolved directly as a mesh axis name: mark with special
+    # logical name understood by rules.resolve via LOGICAL_RULES override
+    return jax.tree_util.tree_map(
+        lambda s: (f"__mesh__{learner_axis}", *s), spec_tree, is_leaf=is_leaf
+    )
+
+
+def consensus_error(params, cfg: GossipConfig) -> jnp.ndarray:
+    """Max relative deviation of the global partition across learners —
+    the convergence diagnostic for tests/monitoring."""
+    errs = []
+
+    def f(path, x):
+        if _is_personal(cfg, path):
+            return
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        num = jnp.max(jnp.abs(x - mean))
+        den = jnp.maximum(jnp.max(jnp.abs(mean)), 1e-8)
+        errs.append(num / den)
+
+    jax.tree_util.tree_map_with_path(f, params)
+    return jnp.max(jnp.stack(errs)) if errs else jnp.zeros(())

@@ -1,0 +1,143 @@
+"""User adjacency graph + random-walk propagation (paper Eqs. 2-4).
+
+The paper builds a user adjacency graph from geography:
+
+    w_{ii'} = I^{ii'} * f(d_{ii'})                         (Eq. 2)
+
+with I^{ii'} the same-city indicator and f a distance-decay map. Each user
+keeps at most N direct neighbors. Communication is propagated up to D hops
+with random-walk weights
+
+    P(n_i = k)  = w_{ik} / sum_{i'} w_{ii'}                (Eq. 3)
+    P(n_i = k') ∝ sum_k w_{ik} w_{kk'}                     (Eq. 4)
+
+i.e. the d-hop weights are the d-th power of the row-normalized adjacency.
+
+Alg. 1 line 15 updates a neighbor i' of i with step  θ·|N^d(i)|·W_{ii'}·g.
+Taken literally the |N^d(i)| factor *amplifies* with neighborhood size and
+diverges for D ≥ 2 on dense graphs; Eq. 3/4 already define a probability, so
+we default to the row-normalized walk weight (Ŵ^d)_{ii'} with optional per-hop
+damping c^d, and keep the literal form behind ``paper_literal=True``
+(documented deviation — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    n_neighbors: int = 2        # N — max direct neighbors per user (paper: N=2)
+    walk_length: int = 3        # D — max random-walk distance (paper sweeps 1..4)
+    hop_damping: float = 1.0    # c — per-hop damping c^d on Ŵ^d
+    uniform_weights: bool = True  # paper experiments "simply set w_{ii'}=1"
+    paper_literal: bool = False   # keep Alg.1's |N^d(i)| amplification factor
+    same_city_only: bool = True   # I^{ii'} indicator from Eq. 2
+
+
+def pairwise_dist(coords: np.ndarray) -> np.ndarray:
+    d2 = np.sum((coords[:, None, :] - coords[None, :, :]) ** 2, axis=-1)
+    return np.sqrt(np.maximum(d2, 0.0))
+
+
+def build_adjacency(
+    coords: np.ndarray,       # (I, 2) user coordinates
+    cities: np.ndarray,       # (I,) int city id per user
+    cfg: GraphConfig,
+) -> np.ndarray:
+    """Dense (I, I) adjacency W per Eq. 2, truncated to top-N nearest neighbors.
+
+    w in [0,1]; w=0 means no relationship. Diagonal is 0 (self handled
+    separately by Alg. 1 line 11). Symmetrized by max(W, W^T) so the
+    graph is undirected (if i picked i' as a nearest neighbor, they can
+    communicate both ways).
+    """
+    I = coords.shape[0]
+    dist = pairwise_dist(coords)
+    same_city = cities[:, None] == cities[None, :]
+    np.fill_diagonal(same_city, False)
+    # distance -> relationship degree: monotone decreasing into (0, 1]
+    if cfg.uniform_weights:
+        w_full = same_city.astype(np.float64)
+    else:
+        w_full = same_city / (1.0 + dist)
+    if not cfg.same_city_only:
+        # cross-city fallback (not used by the paper; kept for ablations)
+        w_cross = (~same_city) / (1.0 + dist)
+        np.fill_diagonal(w_cross, 0.0)
+        w_full = w_full + 1e-3 * w_cross
+    # top-N truncation by distance among same-city users (cheaper to maintain)
+    order = np.argsort(np.where(w_full > 0, dist, np.inf), axis=1)
+    W = np.zeros((I, I), dtype=np.float32)
+    rows = np.arange(I)[:, None]
+    top = order[:, : cfg.n_neighbors]
+    keep = np.take_along_axis(w_full, top, axis=1) > 0
+    W[rows.repeat(cfg.n_neighbors, 1)[keep], top[keep]] = np.take_along_axis(
+        w_full, top, axis=1
+    )[keep].astype(np.float32)
+    W = np.maximum(W, W.T)
+    return W
+
+
+def row_normalize(W: np.ndarray) -> np.ndarray:
+    """Random-walk transition matrix Ŵ (Eq. 3). Isolated rows stay zero."""
+    deg = W.sum(axis=1, keepdims=True)
+    return np.where(deg > 0, W / np.maximum(deg, 1e-12), 0.0).astype(np.float32)
+
+
+def walk_propagation_matrix(W: np.ndarray, cfg: GraphConfig) -> np.ndarray:
+    """M (I, I): per-event propagation weights of the global-factor gradient.
+
+    M[i, i'] is the coefficient applied by user i' to the gradient user i
+    sends (Alg. 1 lines 13-15), including the sender's own full update
+    (line 11) as M[i, i] = 1:
+
+        M = I + sum_{d=1..D} c^d * Ŵ^d            (default, normalized)
+        M = I + sum_{d=1..D} |N^d(i)| * W^d       (paper_literal)
+    """
+    I = W.shape[0]
+    M = np.eye(I, dtype=np.float64)
+    if cfg.paper_literal:
+        Wd = np.eye(I)
+        for d in range(1, cfg.walk_length + 1):
+            Wd = Wd @ W
+            nd = (Wd > 0).sum(axis=1, keepdims=True).astype(np.float64)  # |N^d(i)|
+            M += nd * Wd
+    else:
+        What = row_normalize(W).astype(np.float64)
+        Wd = np.eye(I)
+        for d in range(1, cfg.walk_length + 1):
+            Wd = Wd @ What
+            M += (cfg.hop_damping ** d) * Wd
+    return M.astype(np.float32)
+
+
+def neighbor_counts(W: np.ndarray, max_d: int) -> np.ndarray:
+    """|N^d(i)| for d=1..max_d — used by the complexity benchmark."""
+    I = W.shape[0]
+    A = (W > 0).astype(np.float64)
+    reach_prev = np.eye(I, dtype=bool)
+    reached = np.eye(I, dtype=bool)
+    counts = np.zeros((max_d, I), dtype=np.int64)
+    Ad = np.eye(I)
+    for d in range(max_d):
+        Ad = Ad @ A
+        new = (Ad > 0) & ~reached
+        counts[d] = new.sum(axis=1)
+        reached |= new
+    return counts
+
+
+def communication_bytes(W: np.ndarray, D: int, K: int, n_ratings: int) -> int:
+    """Paper §Complexity: |O| * min(|C^i|, N^D(i)) * 4K bytes per epoch.
+
+    We use the realized mean multi-hop neighborhood size over users (the
+    per-event fan-out of the gradient message) times 4K bytes.
+    """
+    counts = neighbor_counts(W, D).sum(axis=0)  # |N^D(i)| per user
+    mean_fanout = float(counts.mean())
+    return int(round(n_ratings * mean_fanout * 4 * K))

@@ -1,0 +1,57 @@
+"""Evaluation metrics: P@k and R@k (paper §Experiments/Metrics).
+
+    P@k = |S_i^T ∩ S_i^R| / k          R@k = |S_i^T ∩ S_i^R| / |S_i^T|
+
+averaged over users with a non-empty test set; training items are excluded
+from the recommendation candidate set (standard protocol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_recommend(scores: jnp.ndarray, train_mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-k item indices per user, excluding training items.
+
+    scores: (I, J) float; train_mask: (I, J) bool (True = seen in training).
+    """
+    masked = jnp.where(train_mask, -jnp.inf, scores)
+    _, idx = jax.lax.top_k(masked, k)
+    return idx
+
+
+def precision_recall_at_k(
+    scores: np.ndarray,
+    train_mask: np.ndarray,
+    test_mask: np.ndarray,
+    k: int,
+) -> tuple[float, float]:
+    """Mean P@k and R@k over users with >=1 test item."""
+    rec = np.asarray(topk_recommend(jnp.asarray(scores), jnp.asarray(train_mask), k))
+    hits = np.take_along_axis(test_mask, rec, axis=1).sum(axis=1)  # |S^T ∩ S^R|
+    n_test = test_mask.sum(axis=1)
+    valid = n_test > 0
+    if not valid.any():
+        return 0.0, 0.0
+    p_at_k = float((hits[valid] / k).mean())
+    r_at_k = float((hits[valid] / n_test[valid]).mean())
+    return p_at_k, r_at_k
+
+
+def evaluate_ranking(scores, train_mask, test_mask, ks=(5, 10)) -> dict[str, float]:
+    out = {}
+    for k in ks:
+        p, r = precision_recall_at_k(scores, train_mask, test_mask, k)
+        out[f"P@{k}"] = p
+        out[f"R@{k}"] = r
+    return out
+
+
+def masks_from_interactions(n_users: int, n_items: int, pairs: np.ndarray) -> np.ndarray:
+    """(I, J) bool mask from an (n, 2) array of (user, item) pairs."""
+    m = np.zeros((n_users, n_items), dtype=bool)
+    if len(pairs):
+        m[pairs[:, 0], pairs[:, 1]] = True
+    return m

@@ -1,0 +1,76 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python for correctness); on TPU pass
+``interpret=False`` for the compiled path. All wrappers pad to MXU/lane
+alignment (128) and slice back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dmf_update, gossip_mix, topk_scores
+
+LANE = 128
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "gamma", "interpret"))
+def dmf_grads(u, p, q, r, conf, *, alpha: float, beta: float, gamma: float,
+              interpret: bool = True):
+    """Fused Eqs. 9-11. u/p/q: (B, K); r/conf: (B,)."""
+    B, K = u.shape
+    block_b = 256 if B % 256 == 0 else (B if B <= 256 else None)
+    if block_b is None:
+        # pad batch to a multiple of 256; padded rows have conf=0 (no-op grads
+        # except the regularizer on zero factors = 0)
+        u, p, q = (_pad_to(x, 256, 0) for x in (u, p, q))
+        r = _pad_to(r, 256, 0)
+        conf = _pad_to(conf, 256, 0)
+        block_b = 256
+    Bp = u.shape[0]
+    uP, pP, qP = (_pad_to(x, LANE, 1) for x in (u, p, q))
+    gu, gp, gq = dmf_update.dmf_grads_kernel_call(
+        uP, pP, qP, r, conf, alpha=alpha, beta=beta, gamma=gamma,
+        block_b=block_b, interpret=interpret,
+    )
+    return gu[:B, :K], gp[:B, :K], gq[:B, :K]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_op(M, X, *, interpret: bool = True):
+    """Y = M @ X with MXU tiling. M: (I, I); X: (I, F)."""
+    I, F = X.shape
+    Mp = _pad_to(_pad_to(M.astype(jnp.float32), LANE, 0), LANE, 1)
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), LANE, 0), LANE, 1)
+    Y = gossip_mix.gossip_mix_kernel_call(Mp, Xp, interpret=interpret)
+    return Y[:I, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def recommend_topk(U, V, train_mask, k: int, *, interpret: bool = True):
+    """Masked top-k recommendation; never materializes (I, J) in HBM."""
+    I, K = U.shape
+    J = V.shape[0]
+    Up = _pad_to(_pad_to(U.astype(jnp.float32), LANE, 0), LANE, 1)
+    Vp = _pad_to(_pad_to(V.astype(jnp.float32), 256, 0), LANE, 1)
+    # padded users: mask=0 rows are fine (garbage rows sliced off);
+    # padded items must be masked out
+    mp = _pad_to(_pad_to(train_mask.astype(jnp.int8), 256, 1), LANE, 0)
+    if mp.shape[1] > J:
+        mp = mp.at[:, J:].set(1)
+    vals, idx = topk_scores.topk_scores_kernel_call(
+        Up, Vp, mp, k, interpret=interpret,
+    )
+    return vals[:I], idx[:I]

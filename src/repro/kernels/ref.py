@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dmf_grads_ref(u, p, q, r, conf, alpha, beta, gamma):
+    """Fused DMF per-rating gradients (paper Eqs. 9-11), confidence-weighted.
+
+    u, p, q: (B, K); r, conf: (B,). Returns (gu, gp, gq) each (B, K).
+    """
+    v = p + q
+    err = conf * (r - jnp.sum(u * v, axis=-1))
+    gu = -err[:, None] * v + alpha * u
+    gp = -err[:, None] * u + beta * p
+    gq = -err[:, None] * u + gamma * q
+    return gu, gp, gq
+
+
+def gossip_mix_ref(M, X):
+    """Propagation mixing: (I, I) walk matrix times flattened learner state
+    (I, F) — Alg. 1 line 15 vectorized over receivers."""
+    return jnp.einsum("ij,jf->if", M, X)
+
+
+def topk_scores_ref(U, V, train_mask, k):
+    """Serving: masked preference scores + per-user top-k.
+
+    U: (I, K), V: (J, K), train_mask: (I, J) bool. Returns (vals, idx)."""
+    scores = U @ V.T
+    scores = jnp.where(train_mask, -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)

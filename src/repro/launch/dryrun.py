@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: the dry-run (and only the dry-run)
+#   builds the 256/512-chip production meshes out of host placeholder devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) this lowers + compiles the
+appropriate step function with ShapeDtypeStruct inputs (no allocation),
+prints memory/cost analysis, extracts collective bytes from the compiled
+HLO, and writes one JSON record per combination to
+``benchmarks/results/dryrun/``. Roofline terms (deliverable g) are derived
+from these records by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--sync gossip]
+"""
+import argparse
+import functools
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import make_train_step
+from repro.launch.serve import make_decode_step, make_prefill_step, serve_param_shardings
+from repro.models import transformer
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.optim import adamw
+from repro.sharding import rules
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+def _dtype_bytes(dt: str) -> int:
+    return {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+        "f8e4m3fn": 1, "f8e5m2": 1,
+    }.get(dt, 4)
+
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in (compiled) HLO."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op_m = re.search(
+            r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start|-done)?\(", rhs)
+        if not op_m:
+            continue
+        if rhs.startswith("tuple(") or op_m.group(0).endswith("-done("):
+            continue  # -done carries no new bytes; counted at -start
+        op = op_m.group(1)
+        # output shapes precede the op name on the lhs type annotation
+        type_part = rhs[: op_m.start()]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_part):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _dtype_bytes(dt)
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+def hlo_flops_bytes(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+OPT_VARIANTS = {
+    # §Perf hillclimb variants (EXPERIMENTS.md §Perf):
+    #   tri      — triangular causal schedule (halves attention FLOPs)
+    #   serve_ws — weight-stationary decode (resident weights, 2D experts)
+    #   dp       — pure data-parallel layout over the whole mesh (dense only)
+    "tri": {},
+    "serve_ws": {},
+    "dp": {},
+}
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, sync: str = "allreduce",
+                calibrate: bool = True, opt: str | None = None):
+    """Lower+compile the right step for (arch, shape); XLA counts a scan
+    (while-loop) body once, so two extra cheap compiles at 1 and 2 periods
+    calibrate the per-period cost and the totals are extrapolated:
+        total = q(full) + (q(2p) - q(1p)) * (n_periods - 1).
+    Returns the result dict with raw + corrected quantities."""
+    cfg = registry.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context_decode:
+        return {"skipped": "full-attention arch: long_500k requires "
+                "sub-quadratic attention (DESIGN.md §5)"}
+    import dataclasses as _dc
+    if opt == "tri":
+        cfg = _dc.replace(cfg, triangular_attention=True)
+    elif opt == "serve_ws":
+        cfg = _dc.replace(cfg, serve_weight_stationary=True)
+    res = _lower_one(cfg, shape, mesh, sync=sync, opt=opt)
+    res["opt"] = opt
+    if "skipped" in res or not calibrate:
+        return res
+    p = len(cfg.period)
+    r1 = _lower_one(_dc.replace(cfg, n_layers=p), shape, mesh, sync=sync, opt=opt)
+    r2 = _lower_one(_dc.replace(cfg, n_layers=2 * p), shape, mesh, sync=sync, opt=opt)
+    n_periods = cfg.n_periods
+    body_flops = max(0.0, r2["hlo_flops_per_device"] - r1["hlo_flops_per_device"])
+    body_bytes = max(0.0, r2["hlo_bytes_per_device"] - r1["hlo_bytes_per_device"])
+    res["corrected_flops_per_device"] = (
+        res["hlo_flops_per_device"] + body_flops * (n_periods - 1)
+    )
+    res["corrected_bytes_per_device"] = (
+        res["hlo_bytes_per_device"] + body_bytes * (n_periods - 1)
+    )
+    coll = dict(res["collective_bytes_per_device"])
+    for op in set(r1["collective_bytes_per_device"]) | set(r2["collective_bytes_per_device"]) | set(coll):
+        body = max(
+            0,
+            r2["collective_bytes_per_device"].get(op, 0)
+            - r1["collective_bytes_per_device"].get(op, 0),
+        )
+        coll[op] = coll.get(op, 0) + body * (n_periods - 1)
+    res["corrected_collective_bytes_per_device"] = coll
+    res["calib"] = {
+        "p1_flops": r1["hlo_flops_per_device"],
+        "p2_flops": r2["hlo_flops_per_device"],
+        "p1_coll": r1["collective_bytes_per_device"],
+        "p2_coll": r2["collective_bytes_per_device"],
+    }
+    return res
+
+
+def _lower_one(cfg: ModelConfig, shape, mesh, *, sync: str = "allreduce",
+               opt: str | None = None):
+    shape_name = shape.name
+    arch = cfg.name
+    t0 = time.time()
+    if shape.kind == "train":
+        overrides = rules.DP_OVERRIDES if opt == "dp" else None
+        batch_over = ("data", "model") if opt == "dp" else None
+        gossip_cfg = None
+        if opt == "gossip_d1":
+            from repro.core.gossip import GossipConfig
+            sync, gossip_cfg = "gossip", GossipConfig(walk_length=1)
+        elif opt == "gossip_pod":
+            from repro.core.gossip import GossipConfig
+            sync = "gossip"
+            gossip_cfg = GossipConfig(learner_axis="pod", walk_length=1)
+        step, init_fn, pshard = make_train_step(
+            cfg, mesh, adamw(3e-4), sync=sync, rules_overrides=overrides,
+            gossip=gossip_cfg,
+        )
+        batch = specs_lib.batch_specs(cfg, shape, mesh, batch_over=batch_over)
+        params_shape, specs = transformer.abstract_params(cfg)
+        if sync == "gossip":
+            L = mesh.shape[(gossip_cfg.learner_axis if gossip_cfg else "data")]
+            params_shape = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct((L, *x.shape), x.dtype), params_shape
+            )
+            opt_shape = jax.eval_shape(
+                lambda p: jax.vmap(adamw(3e-4).init)(p), params_shape
+            )
+        else:
+            opt_shape = jax.eval_shape(adamw(3e-4).init, params_shape)
+        from repro.launch.train import TrainState
+        state_shape = TrainState(params_shape, opt_shape)
+        # bind shardings onto abstract state
+        state_sds = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            state_shape,
+            _state_shardings(state_shape, pshard),
+        )
+        lowered = step.lower(state_sds, batch)
+    elif shape.kind == "prefill":
+        pshard = serve_param_shardings(cfg, mesh)
+        params_shape, _ = transformer.abstract_params(cfg)
+        params_sds = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            params_shape, pshard,
+        )
+        batch = specs_lib.batch_specs(cfg, shape, mesh)
+        step = make_prefill_step(cfg, mesh)
+        lowered = step.lower(params_sds, batch)
+    else:  # decode
+        if shape_name == "long_500k" and not cfg.supports_long_context_decode:
+            return {"skipped": "full-attention arch: long_500k requires "
+                    "sub-quadratic attention (DESIGN.md §5)"}
+        ws = bool(cfg.serve_weight_stationary)
+        pshard = serve_param_shardings(cfg, mesh, fsdp=not ws, weight_stationary=ws)
+        params_shape, _ = transformer.abstract_params(cfg)
+        params_sds = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            params_shape, pshard,
+        )
+        cache, cache_pspecs, tokens, pos = specs_lib.decode_specs(cfg, shape, mesh)
+        step = make_decode_step(cfg, mesh, cache_pspecs)
+        lowered = step.lower(params_sds, cache, tokens, pos)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    flops, bytes_acc = hlo_flops_bytes(compiled)
+    coll = collective_bytes(compiled.as_text())
+    n_dev = mesh.size
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "sync": sync,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        "n_devices": n_dev,
+    }
+    return res
+
+
+def _state_shardings(state_shape, pshard):
+    """TrainState shardings: params use pshard; opt state mirrors by shape."""
+    from repro.launch.train import _opt_shardings
+    from repro.optim import adamw as _a
+    mesh = jax.tree_util.tree_leaves(pshard)[0].mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+    by_shape = {}
+    for p, s in zip(
+        jax.tree_util.tree_leaves(state_shape.params), jax.tree_util.tree_leaves(pshard)
+    ):
+        by_shape.setdefault(p.shape, s)
+    opt_sh = jax.tree_util.tree_map(
+        lambda l: by_shape.get(l.shape, repl), state_shape.opt_state
+    )
+    from repro.launch.train import TrainState
+    return TrainState(pshard, opt_sh)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sync", default="allreduce", choices=["allreduce", "gossip"])
+    ap.add_argument("--opt", default=None,
+                    choices=[None, "tri", "serve_ws", "dp", "gossip_d1",
+                             "gossip_pod"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    combos = []
+    archs = registry.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{'multipod' if args.multi_pod else 'pod'}__{args.sync}"
+        if args.opt:
+            tag += f"__{args.opt}"
+        out_path = RESULTS / f"{tag}.json"
+        if out_path.exists() and not args.force:
+            print(f"[cached] {tag}")
+            n_ok += 1
+            continue
+        print(f"[lower ] {tag} ...", flush=True)
+        try:
+            res = lower_combo(arch, shape, mesh, sync=args.sync, opt=args.opt)
+        except Exception as e:
+            res = {"error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            n_fail += 1
+            print(f"[FAIL  ] {tag}: {res['error']}")
+        else:
+            if "skipped" in res:
+                n_skip += 1
+                print(f"[skip  ] {tag}: {res['skipped']}")
+            else:
+                n_ok += 1
+                print(
+                    f"[ok    ] {tag}: compile={res['compile_s']}s "
+                    f"flops/dev={res['hlo_flops_per_device']:.3e} "
+                    f"coll={ {k: f'{v:.2e}' for k, v in res['collective_bytes_per_device'].items()} }"
+                )
+        out_path.write_text(json.dumps(res, indent=1))
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

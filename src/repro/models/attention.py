@@ -1,0 +1,368 @@
+"""Attention: GQA and MLA, train/prefill (blockwise flash-style) and decode
+(including sequence-sharded KV caches for 32k-512k contexts).
+
+Sharding contract (see sharding/rules.py):
+* q/k/v head dims carry logical axis "heads" / "kv_heads";
+* decode KV caches carry logical axis "seq_kv" on the sequence dim — resolved
+  to the *model* axis for decode_32k (batch already fills the data axis) and
+  to ("data","model") for long_500k (batch=1); the partial-softmax combine
+  over cache shards is a log-sum-exp `psum` (ring-free, one small collective
+  per layer), implemented in `sharded_decode_attend` via shard_map by the
+  caller (launch/serve.py) or left to XLA SPMD when the cache is replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure JAX, O(S·chunk) memory.
+# ---------------------------------------------------------------------------
+def blockwise_attention(
+    q: jnp.ndarray,        # (B, Sq, H, hd)
+    k: jnp.ndarray,        # (B, Sk, KV, hd)
+    v: jnp.ndarray,        # (B, Sk, KV, vd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,     # absolute position of q[0] (prefill continuation)
+    q_chunk: int = 1024,
+    kv_chunk: int = 2048,
+    softmax_scale: float | None = None,
+    triangular: bool = False,
+    window: int = 0,       # >0: sliding-window (band) causal attention
+) -> jnp.ndarray:
+    """Nested q×kv chunked attention with online softmax: the (Sq, Sk) score
+    matrix is never materialized beyond a (q_chunk, kv_chunk) tile.
+
+    Baseline schedule scans *all* kv chunks for every q chunk (fully-masked
+    causal tiles are computed then masked — ~2x attention-FLOPs waste; the
+    triangular schedule is a §Perf hillclimb, see EXPERIMENTS.md)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    if (triangular and causal and not window and Sq == Sk and q_offset == 0
+            and Sq % max(q_chunk, 1) == 0 and Sq > q_chunk):
+        return triangular_attention(q, k, v, q_chunk=q_chunk,
+                                    softmax_scale=softmax_scale)
+    vd = v.shape[-1]
+    G = H // KV
+    scale = softmax_scale or 1.0 / math.sqrt(hd)
+    qf = (q * scale).reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+
+    if Sk <= kv_chunk and Sq <= q_chunk:
+        return _dense_attend(qf, k, v, causal, q_offset, window).reshape(B, Sq, H, vd).astype(q.dtype)
+
+    # pad Sq to a multiple of q_chunk (cheap; cross-attn with ragged Sq)
+    pad_q = (-Sq) % q_chunk
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    Sqp = qf.shape[1]
+    nq = Sqp // q_chunk
+    assert Sk % kv_chunk == 0, f"Sk={Sk} not divisible by kv_chunk={kv_chunk}"
+    nk = Sk // kv_chunk
+
+    qc = qf.reshape(B, nq, q_chunk, KV, G, hd).swapaxes(0, 1)   # (nq,B,qc,KV,G,hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nk, kv_chunk, KV, vd).swapaxes(0, 1)
+
+    def q_body(qstart, qb):
+        qpos = q_offset + qstart + jnp.arange(q_chunk)
+
+        def kv_body(carry, xs):
+            acc, m, l, kstart = carry
+            kb, vb = xs
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb.astype(jnp.float32))
+            if causal:
+                kvpos = kstart + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kvpos[None, :]
+                if window:
+                    mask &= (qpos[:, None] - kvpos[None, :]) < window
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskv->bkgqv", p, vb.astype(jnp.float32)
+            )
+            return (acc, m_new, l, kstart + kv_chunk), None
+
+        acc0 = jnp.zeros((B, KV, G, q_chunk, vd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        (acc, m, l, _), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0, jnp.zeros((), jnp.int32)), (kc, vc)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)       # (B,KV,G,qc,vd)
+        return qstart + q_chunk, out.transpose(0, 3, 1, 2, 4)  # (B,qc,KV,G,vd)
+
+    _, outs = jax.lax.scan(q_body, jnp.zeros((), jnp.int32), qc)
+    out = outs.swapaxes(0, 1).reshape(B, Sqp, H, vd)
+    if pad_q:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def triangular_attention(
+    q: jnp.ndarray,        # (B, S, H, hd)   self-attention, Sq == Sk
+    k: jnp.ndarray,        # (B, S, KV, hd)
+    v: jnp.ndarray,        # (B, S, KV, vd)
+    *,
+    q_chunk: int = 2048,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """§Perf hillclimb: causal attention that only computes the lower
+    triangle — an unrolled Python loop over q chunks, where chunk i attends
+    kv[: (i+1)·qc] (static slice). Halves attention FLOPs vs the baseline
+    blockwise schedule (which computes then masks the upper triangle) at the
+    cost of nq einsum instances in the HLO (nq = S/q_chunk, kept small)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[-1]
+    G = H // KV
+    scale = softmax_scale or 1.0 / math.sqrt(hd)
+    qf = (q * scale).reshape(B, S, KV, G, hd).astype(jnp.float32)
+    assert S % q_chunk == 0, (S, q_chunk)
+    nq = S // q_chunk
+    outs = []
+    for i in range(nq):
+        qb = qf[:, i * q_chunk : (i + 1) * q_chunk]
+        end = (i + 1) * q_chunk
+        kb, vb = k[:, :end], v[:, :end]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb.astype(jnp.float32))
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        mask = qpos[:, None] >= jnp.arange(end)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskv->bkgqv", p, vb.astype(jnp.float32))
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, vd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def _dense_attend(qf, k, v, causal, q_offset, window: int = 0):
+    # qf: (B,Sq,KV,G,hd) pre-scaled f32
+    B, Sq, KV, G, hd = qf.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        if window:
+            mask &= (qpos[:, None] - jnp.arange(Sk)[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskv->bkgqv", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4)  # (B,Sq,KV,G,vd)
+
+
+def decode_attend(
+    q: jnp.ndarray,          # (B, H, hd) — single new token
+    cache_k: jnp.ndarray,    # (B, S, KV, hd)
+    cache_v: jnp.ndarray,    # (B, S, KV, vd)
+    length: jnp.ndarray,     # () int — valid prefix length (== pos of new token + 1)
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """One-token attention against a (possibly seq-sharded) KV cache.
+
+    When the cache's sequence dim is sharded, XLA SPMD evaluates the einsums
+    shard-locally and the softmax normalization induces the cross-shard
+    reduction; the masked positions contribute exp(NEG_INF)=0.
+    """
+    B, S, KV, hd = cache_k.shape
+    H = q.shape[1]
+    G = H // KV
+    scale = softmax_scale or 1.0 / math.sqrt(hd)
+    qf = (q * scale).reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, cache_k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, None, None, :] < length
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskv->bkgv", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s, so = 0.02, 0.02 / math.sqrt(2 * cfg.n_layers)
+    params = {
+        "wq": jax.random.normal(ks[0], (d, H, hd)) * s,
+        "wk": jax.random.normal(ks[1], (d, KV, hd)) * s,
+        "wv": jax.random.normal(ks[2], (d, KV, hd)) * s,
+        "wo": jax.random.normal(ks[3], (H, hd, d)) * so,
+    }
+    specs = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:  # Qwen1.5
+        params |= {
+            "bq": jnp.zeros((H, hd)),
+            "bk": jnp.zeros((KV, hd)),
+            "bv": jnp.zeros((KV, hd)),
+        }
+        specs |= {
+            "bq": ("heads", None),
+            "bk": ("kv_heads", None),
+            "bv": ("kv_heads", None),
+        }
+    return params, specs
+
+
+def gqa_qkv(params, x, positions, cfg: ModelConfig, dtype):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_out(params, o, dtype):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+# KV is compressed to a kv_lora_rank latent c_kv plus a shared decoupled
+# RoPE key; the *cache stores only (c_kv, k_rope)* — the paper-family's
+# memory saving. Decode uses the absorbed form (attention in latent space).
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    hd, vd = cfg.head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    s, so = 0.02, 0.02 / math.sqrt(2 * cfg.n_layers)
+    params = {
+        # queries: per-head nope + rope parts
+        "wq": jax.random.normal(ks[0], (d, H, hd)) * s,
+        "wq_rope": jax.random.normal(ks[1], (d, H, rd)) * s,
+        # compressed kv path
+        "w_dkv": jax.random.normal(ks[2], (d, r)) * s,          # down
+        "w_kr": jax.random.normal(ks[3], (d, rd)) * s,          # shared rope key
+        "kv_norm": jnp.ones((r,)),
+        "w_uk": jax.random.normal(ks[4], (r, H, hd)) * s,       # up: keys
+        "w_uv": jax.random.normal(ks[5], (r, H, vd)) * s,       # up: values
+        "wo": jax.random.normal(ks[6], (H, vd, d)) * so,
+    }
+    specs = {
+        "wq": ("embed", "heads", None),
+        "wq_rope": ("embed", "heads", None),
+        "w_dkv": ("embed", None),
+        "w_kr": ("embed", None),
+        "kv_norm": (None,),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.q_lora_rank:
+        params |= {
+            "w_dq": jax.random.normal(ks[7], (d, cfg.q_lora_rank)) * s,
+            "q_norm": jnp.ones((cfg.q_lora_rank,)),
+        }
+        specs |= {"w_dq": ("embed", None), "q_norm": (None,)}
+        params["wq"] = jax.random.normal(ks[0], (cfg.q_lora_rank, H, hd)) * s
+        params["wq_rope"] = jax.random.normal(ks[1], (cfg.q_lora_rank, H, rd)) * s
+        specs["wq"] = (None, "heads", None)
+        specs["wq_rope"] = (None, "heads", None)
+    return params, specs
+
+
+def mla_compress(params, x, positions, cfg: ModelConfig, dtype):
+    """x -> (c_kv normed, k_rope) — exactly what the MLA cache stores."""
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dtype))
+    c_kv = layers.rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_r = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(dtype))
+    k_r = layers.apply_rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_r
+
+
+def mla_queries(params, x, positions, cfg: ModelConfig, dtype):
+    if cfg.q_lora_rank:
+        xq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dtype))
+        xq = layers.rms_norm(xq, params["q_norm"], cfg.norm_eps)
+    else:
+        xq = x
+    q = jnp.einsum("bsr,rhk->bshk", xq, params["wq"].astype(dtype))
+    q_r = jnp.einsum("bsr,rhk->bshk", xq, params["wq_rope"].astype(dtype))
+    q_r = layers.apply_rope(q_r, positions, cfg.rope_theta)
+    return q, q_r
+
+
+def mla_attend_full(params, x, positions, cfg: ModelConfig, dtype, kv_chunk: int):
+    """Training/prefill MLA: expand keys/values per head from the latent."""
+    q, q_r = mla_queries(params, x, positions, cfg, dtype)
+    c_kv, k_r = mla_compress(params, x, positions, cfg, dtype)
+    k = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dtype))
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"].astype(dtype))
+    H = cfg.n_heads
+    k_full = jnp.concatenate([k, jnp.broadcast_to(k_r[:, :, None, :], q_r.shape)], -1)
+    q_full = jnp.concatenate([q, q_r], -1)
+    scale = 1.0 / math.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    o = blockwise_attention(
+        q_full, k_full, v, causal=True, kv_chunk=kv_chunk, softmax_scale=scale,
+        triangular=cfg.triangular_attention,
+    )
+    out = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(dtype))
+    return out, (c_kv, k_r)
+
+
+def mla_decode(params, x, cache_ckv, cache_kr, length, positions, cfg: ModelConfig, dtype):
+    """Absorbed-form single-token MLA decode against the latent cache.
+
+    q_abs[h] = q[h] @ W_uk[h]^T lives in latent space: scores are
+    q_abs·c_kv + q_rope·k_rope; output o = (p·c_kv) @ W_uv — per-token cost
+    O(H·(hd·r) + S·(r+rd)) with only the (r+rd)-wide cache in memory.
+    """
+    q, q_r = mla_queries(params, x, positions, cfg, dtype)  # (B,1,H,*)
+    q, q_r = q[:, 0], q_r[:, 0]                             # (B,H,*)
+    q_abs = jnp.einsum("bhk,rhk->bhr", q, params["w_uk"].astype(dtype))
+    scale = 1.0 / math.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    s = jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32), cache_ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhk,bsk->bhs", q_r.astype(jnp.float32), cache_kr.astype(jnp.float32))
+    s = s * scale
+    S = cache_ckv.shape[1]
+    mask = jnp.arange(S)[None, None, :] < length
+    p = jax.nn.softmax(jnp.where(mask, s, NEG_INF), axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, cache_ckv.astype(jnp.float32)).astype(dtype)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, params["w_uv"].astype(dtype))
+    return jnp.einsum("bhv,hvd->bd", o, params["wo"].astype(dtype))[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (Llama-3.2-Vision style image layers)
+# ---------------------------------------------------------------------------
+def init_cross_attn(key, cfg: ModelConfig):
+    params, specs = init_gqa(key, cfg)
+    params["gate"] = jnp.zeros(())   # tanh-gated residual, zero-init
+    specs["gate"] = ()
+    return params, specs
+
+
+def cross_attend(params, x, media: jnp.ndarray, cfg: ModelConfig, dtype):
+    """x: (B,S,D) text; media: (B,M,D) precomputed patch embeddings (stub
+    frontend per DESIGN.md). No RoPE; no causal mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bmd,dhk->bmhk", media, params["wk"].astype(dtype))
+    v = jnp.einsum("bmd,dhk->bmhk", media, params["wv"].astype(dtype))
+    o = blockwise_attention(q, k, v, causal=False, kv_chunk=max(k.shape[1], 16))
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dtype))
+    return jnp.tanh(params["gate"]).astype(dtype) * out

@@ -1,0 +1,114 @@
+"""Common layers: RMSNorm, RoPE, dense MLP, embeddings, chunked loss.
+
+Parameter trees are plain dicts; every ``init_*`` returns ``(params, specs)``
+where ``specs`` mirrors the tree with tuples of *logical* axis names
+(resolved to mesh axes in ``repro.sharding.rules``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int):
+    return jnp.ones((d,), jnp.float32), ("embed_nodiv",)
+
+
+# --- RoPE -------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd) rotated pairwise; positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs           # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- dense (SwiGLU) MLP -----------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    params = {
+        "wi": jax.random.normal(k1, (d_model, d_ff), dtype) * s,
+        "wg": jax.random.normal(k2, (d_model, d_ff), dtype) * s,
+        "wo": jax.random.normal(k3, (d_ff, d_model), dtype) * s,
+    }
+    specs = {
+        "wi": ("embed", "ff"),
+        "wg": ("embed", "ff"),
+        "wo": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def mlp(params, x: jnp.ndarray, dtype) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dtype))
+    g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dtype))
+
+
+# --- embeddings / unembedding ----------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (
+        jax.random.normal(key, (vocab, d_model), dtype) * 0.02,
+        ("vocab", "embed_nodiv"),
+    )
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype=jnp.float32):
+    return (
+        jax.random.normal(key, (d_model, vocab), dtype) * 0.02,
+        ("embed_nodiv", "vocab"),
+    )
+
+
+def chunked_cross_entropy(
+    h: jnp.ndarray,            # (B, S, D) final hidden states
+    lm_head: jnp.ndarray,      # (D, V)
+    labels: jnp.ndarray,       # (B, S) int32, -1 = ignore
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Mean CE, computing logits chunk-by-chunk over the sequence so the
+    (B, S, V) logits tensor is never materialized (memory-roofline relevant
+    for 128k-256k vocabularies)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(hc, lc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, lm_head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        hc, lc = xs
+        l, m = one(hc, lc)
+        return (carry[0] + l, carry[1] + m), None
+
+    hc = h[:, : n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    lc = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    if rem:
+        l, m = one(h[:, n * chunk :], labels[:, n * chunk :])
+        tot, cnt = tot + l, cnt + m
+    return tot / jnp.maximum(cnt, 1.0)

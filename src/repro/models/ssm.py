@@ -1,0 +1,226 @@
+"""Mamba2 — SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode is the O(1) recurrent state update. Heads are
+the parallelism unit (logical axis "ssm_heads" -> mesh "model").
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim (P=head_dim),
+state N = ssm_d_state, G = ssm_n_groups (B/C shared per group, GVA-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, W-1, conv_dim) rolling conv window
+    state: jnp.ndarray  # (B, H, P, N) recurrent SSM state
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_d_state
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H, P, N, G = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    cdim = conv_dim(cfg)
+    ks = jax.random.split(key, 6)
+    s, so = 0.02, 0.02 / math.sqrt(2 * cfg.n_layers)
+    # in_proj emits [z (di), x (di), B (G*N), C (G*N), dt (H)]
+    params = {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * G * N + H)) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, cdim)) * s,
+        "conv_b": jnp.zeros((cdim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),       # A = -exp(A_log)
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))),  # softplus^-1
+        "norm": jnp.ones((di,)),
+        "out_proj": jax.random.normal(ks[2], (di, d)) * so,
+    }
+    specs = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, specs
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, G, N, H = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_d_state, cfg.ssm_n_heads
+    z, x, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum' for 1-SS matrix: L[..., i, j] = sum_{j<k<=i} x[k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,     # (B, L, H, P)
+    dt: jnp.ndarray,    # (B, L, H)  (post-softplus)
+    A: jnp.ndarray,     # (H,) negative
+    Bm: jnp.ndarray,    # (B, L, G, N)
+    Cm: jnp.ndarray,    # (B, L, G, N)
+    chunk: int,
+    init_state: jnp.ndarray | None = None,   # (B, H, P, N)
+):
+    """Chunked SSD scan. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    # to chunks, f32 for stability
+    xb = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtb = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bb = Bm.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+    Cb = Cm.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+    dA = dtb * A.astype(jnp.float32)                       # (B,nc,c,H)
+
+    dA_cs = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+    # 1) intra-chunk (diagonal blocks): y = (C B^T ∘ L) x with decay matrix L
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (B,nc,H,c,c)
+    CB = jnp.einsum("bkcgn,bksgn->bkgcs", Cb, Bb)          # (B,nc,G,c,s)
+    CB = jnp.repeat(CB, rep, axis=2)                       # -> (B,nc,H,c,s)
+    att = CB * Lmat * dtb.transpose(0, 1, 3, 2)[..., None, :]  # × dt_s
+    y_diag = jnp.einsum("bkhcs,bkshp->bkchp", att, xb)
+
+    # 2) per-chunk final states: S_n = sum_s exp(dA_cs[c_end]-dA_cs[s]) dt_s B_s x_s
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (B,nc,c,H)
+    sB = jnp.repeat(Bb, rep, axis=3)                       # (B,nc,c,H,N)
+    states = jnp.einsum(
+        "bkch,bkchn,bkchp->bkhpn",
+        decay_states * dtb, sB, xb,
+    )
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # 4) off-diagonal contribution from carried state
+    state_decay = jnp.exp(dA_cs)                           # (B,nc,c,H)
+    sC = jnp.repeat(Cb, rep, axis=3)                       # (B,nc,c,H,N)
+    y_off = jnp.einsum("bkchn,bkhpn,bkch->bkchp", sC, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, final_state
+
+
+def mamba_forward(
+    params, x: jnp.ndarray, cfg: ModelConfig, dtype,
+) -> tuple[jnp.ndarray, SSMCache]:
+    """Full-sequence Mamba2 block (train / prefill). Returns output and the
+    decode cache (conv tail + final SSM state)."""
+    B, L, _ = x.shape
+    H, P, N, G = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    di, W = cfg.ssm_d_inner, cfg.ssm_conv_width
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    z, xr, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)       # (B, L, cdim)
+    conv_tail = conv_in[:, max(L - (W - 1), 0):, :]
+    if conv_tail.shape[1] < W - 1:  # L < W-1 (tiny smoke shapes)
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (W - 1 - conv_tail.shape[1], 0), (0, 0)))
+    # causal depthwise conv1d
+    pad = jnp.pad(conv_in, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + L, :] * params["conv_w"][i].astype(dtype) for i in range(W)
+    ) + params["conv_b"].astype(dtype)
+    conv = jax.nn.silu(conv)
+    xr, Bc, Cc = jnp.split(conv, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked(
+        xr.reshape(B, L, H, P),
+        dt,
+        A,
+        Bc.reshape(B, L, G, N),
+        Cc.reshape(B, L, G, N),
+        chunk=min(cfg.ssm_chunk, L),
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xr.reshape(B, L, H, P).astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(dtype))
+    return out, SSMCache(conv=conv_tail.astype(dtype), state=state.astype(jnp.float32))
+
+
+def mamba_decode(
+    params, x: jnp.ndarray, cache: SSMCache, cfg: ModelConfig, dtype,
+) -> tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent update: state' = state*exp(dt A) + dt B ⊗ x."""
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    di, W = cfg.ssm_d_inner, cfg.ssm_conv_width
+    zxbcdt = jnp.einsum("bd,de->be", x[:, 0], params["in_proj"].astype(dtype))
+    z, xr, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)       # (B, cdim)
+    win = jnp.concatenate([cache.conv, conv_in[:, None, :]], axis=1)  # (B, W, cdim)
+    conv = jnp.einsum("bwc,wc->bc", win, params["conv_w"].astype(dtype)) + params[
+        "conv_b"
+    ].astype(dtype)
+    conv = jax.nn.silu(conv)
+    xr, Bc, Cc = jnp.split(conv, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                # (B,H)
+    xh = xr.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bc.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    state = cache.state * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, di).astype(dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(dtype))
+    return out[:, None, :], SSMCache(conv=win[:, 1:, :], state=state)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim(cfg)), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )

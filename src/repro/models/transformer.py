@@ -1,0 +1,374 @@
+"""Composable decoder stack covering all assigned architecture families.
+
+The model is a scan over ``n_periods`` stacked periods (HLO size is
+independent of depth — essential for 1-core dry-run compiles of 60-100L
+models). Within a period, layers follow ``cfg.period``:
+
+    layer = x + mixer(norm(x));  x = x + ffn(norm(x))      (ffn optional)
+
+mixers: GQA self-attention, MLA self-attention, Mamba2-SSD, gated
+cross-attention (VLM image layers). ffns: dense SwiGLU or MoE.
+
+Three entry points (matching the assigned input shapes):
+  * ``loss_fn``     — training forward + chunked CE     (train_4k)
+  * ``prefill``     — forward returning logits + caches  (prefill_32k)
+  * ``decode_step`` — 1 token against a cache            (decode_32k/long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import InputShape, LayerSpec, ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig):
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    k1, k2, k3 = jax.random.split(key, 3)
+    params["ln1"], specs["ln1"] = L.init_rms_norm(cfg.d_model)
+    if spec.kind == "attn":
+        if cfg.attn_type == "mla":
+            params["attn"], specs["attn"] = attn_lib.init_mla(k1, cfg)
+        else:
+            params["attn"], specs["attn"] = attn_lib.init_gqa(k1, cfg)
+    elif spec.kind == "cross":
+        params["attn"], specs["attn"] = attn_lib.init_cross_attn(k1, cfg)
+    elif spec.kind == "mamba":
+        params["mamba"], specs["mamba"] = ssm_lib.init_mamba(k1, cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.kind != "mamba" or cfg.d_ff or spec.moe:
+        if cfg.d_ff or spec.moe:
+            params["ln2"], specs["ln2"] = L.init_rms_norm(cfg.d_model)
+            if spec.moe:
+                params["moe"], specs["moe"] = moe_lib.init_moe(k2, cfg)
+            else:
+                params["mlp"], specs["mlp"] = L.init_mlp(k3, cfg.d_model, cfg.d_ff)
+    return params, specs
+
+
+def init_params(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (params, logical-axis specs). Per-period-position layer params
+    are stacked over periods on a leading axis (scanned)."""
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    blocks = {}
+    block_specs = {}
+    for pos, spec in enumerate(cfg.period):
+        pkeys = jax.random.split(keys[pos], cfg.n_periods)
+        stacked = jax.vmap(lambda k: _init_layer(k, spec, cfg)[0])(pkeys)
+        _, sspec = _init_layer(keys[pos], spec, cfg)
+        # leading stacking axis is never sharded: prepend None
+        blocks[str(pos)] = stacked
+        block_specs[str(pos)] = jax.tree_util.tree_map(
+            lambda s: (None, *s), sspec, is_leaf=lambda s: isinstance(s, tuple)
+        )
+    params: dict[str, Any] = {"blocks": blocks}
+    specs: dict[str, Any] = {"blocks": block_specs}
+    ke, kh = keys[-2], keys[-1]
+    if cfg.n_codebooks:  # audio: one table per codebook
+        sub = jax.random.split(ke, cfg.n_codebooks)
+        params["embed"] = jax.vmap(
+            lambda k: L.init_embedding(k, cfg.vocab_size, cfg.d_model)[0]
+        )(sub)
+        specs["embed"] = (None, "vocab", "embed_nodiv")
+        params["lm_head"] = jax.vmap(
+            lambda k: L.init_lm_head(k, cfg.d_model, cfg.vocab_size)[0]
+        )(jax.random.split(kh, cfg.n_codebooks))
+        specs["lm_head"] = (None, "embed_nodiv", "vocab")
+    else:
+        params["embed"], specs["embed"] = L.init_embedding(ke, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"], specs["lm_head"] = L.init_lm_head(kh, cfg.d_model, cfg.vocab_size)
+    if cfg.n_image_tokens:  # vlm projector stub: identity-sized projection
+        params["media_proj"] = jax.random.normal(keys[-3], (cfg.d_model, cfg.d_model)) * 0.02
+        specs["media_proj"] = ("embed", "embed_nodiv")
+    params["final_norm"], specs["final_norm"] = L.init_rms_norm(cfg.d_model)
+    return params, specs
+
+
+def abstract_params(cfg: ModelConfig) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical spec tree) without allocating."""
+    cell = {}
+
+    def f(k):
+        p, s = init_params(cfg, k)
+        cell["specs"] = s
+        return p
+
+    params_shape = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return params_shape, cell["specs"]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _embed(params, tokens, cfg: ModelConfig, dtype):
+    if cfg.n_codebooks:
+        # tokens (B, S, n_q): sum codebook embeddings
+        embs = [
+            params["embed"][q][tokens[..., q]] for q in range(cfg.n_codebooks)
+        ]
+        return sum(embs).astype(dtype)
+    return params["embed"][tokens].astype(dtype)
+
+
+def _apply_layer(
+    lp, spec: LayerSpec, x, positions, media, cfg: ModelConfig, dtype, mesh,
+    collect_cache: bool,
+):
+    cache_out = {}
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.attn_type == "mla":
+            o, (ckv, kr) = attn_lib.mla_attend_full(
+                lp["attn"], h, positions, cfg, dtype, cfg.attn_chunk
+            )
+            if collect_cache:
+                cache_out = {"ckv": ckv, "kr": kr}
+        else:
+            q, k, v = attn_lib.gqa_qkv(lp["attn"], h, positions, cfg, dtype)
+            o = attn_lib.blockwise_attention(
+                q, k, v, causal=True, kv_chunk=cfg.attn_chunk,
+                q_chunk=min(cfg.attn_chunk, 1024),
+                triangular=cfg.triangular_attention,
+                window=spec.sliding_window,
+            )
+            o = attn_lib.gqa_out(lp["attn"], o, dtype)
+            if collect_cache:
+                cache_out = {"k": k, "v": v}
+    elif spec.kind == "cross":
+        o = attn_lib.cross_attend(lp["attn"], h, media, cfg, dtype)
+        if collect_cache:
+            mk = jnp.einsum("bmd,dhk->bmhk", media, lp["attn"]["wk"].astype(dtype))
+            mv = jnp.einsum("bmd,dhk->bmhk", media, lp["attn"]["wv"].astype(dtype))
+            cache_out = {"mk": mk, "mv": mv}
+    else:  # mamba
+        o, ssm_cache = ssm_lib.mamba_forward(lp["mamba"], h, cfg, dtype)
+        if collect_cache:
+            cache_out = {"conv": ssm_cache.conv, "state": ssm_cache.state}
+    x = x + o
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in lp or "moe" in lp:
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if spec.moe:
+            if mesh is not None and mesh.shape.get("model", 1) > 1:
+                y, aux = moe_lib.moe_ffn_sharded(lp["moe"], h, cfg, dtype, mesh)
+            else:
+                y, aux = moe_lib.moe_ffn_local(lp["moe"], h, cfg, dtype)
+        else:
+            y = L.mlp(lp["mlp"], h, dtype)
+        x = x + y
+    return x, aux, cache_out
+
+
+def forward(
+    params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    media: jnp.ndarray | None = None,
+    mesh=None,
+    return_cache: bool = False,
+):
+    """Full-sequence forward. Returns (hidden (B,S,D), aux, cache|None)."""
+    dtype = _dtype(cfg)
+    x = _embed(params, tokens, cfg, dtype)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    if media is not None and "media_proj" in params:
+        media = jnp.einsum("bmd,de->bme", media.astype(dtype), params["media_proj"].astype(dtype))
+
+    def period_body(carry, block_params):
+        x, aux = carry
+        caches = {}
+        for pos, spec in enumerate(cfg.period):
+            x, a, c = _apply_layer(
+                block_params[str(pos)], spec, x, positions, media, cfg, dtype,
+                mesh, return_cache,
+            )
+            aux = aux + a
+            if return_cache:
+                caches[str(pos)] = c
+        return (x, aux), caches if return_cache else None
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / cfg.n_layers, caches
+
+
+def _lm_head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, mesh=None) -> jnp.ndarray:
+    """Mean next-token CE (+ router aux)."""
+    h, aux, _ = forward(
+        params, batch["tokens"], cfg, media=batch.get("media"), mesh=mesh
+    )
+    if cfg.n_codebooks:
+        ce = 0.0
+        for q in range(cfg.n_codebooks):
+            ce += L.chunked_cross_entropy(
+                h, params["lm_head"][q].astype(h.dtype), batch["labels"][..., q],
+                cfg.loss_chunk,
+            )
+        ce = ce / cfg.n_codebooks
+    else:
+        ce = L.chunked_cross_entropy(
+            h, _lm_head(params, cfg).astype(h.dtype), batch["labels"], cfg.loss_chunk
+        )
+    return ce + cfg.router_aux_weight * aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, media=None, mesh=None):
+    """Forward with caches; returns (last-position logits, cache)."""
+    h, _, cache = forward(
+        params, tokens, cfg, media=media, mesh=mesh, return_cache=True
+    )
+    hl = h[:, -1:]
+    head = _lm_head(params, cfg)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,qdv->bsqv", hl, head.astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hl, head.astype(h.dtype))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Empty fixed-size decode cache (leaves stacked over periods)."""
+    dtype = dtype or _dtype(cfg)
+    np_, cache = cfg.n_periods, {}
+    for pos, spec in enumerate(cfg.period):
+        if spec.kind == "attn":
+            S_eff = min(seq_len, spec.sliding_window) if spec.sliding_window else seq_len
+            if cfg.attn_type == "mla":
+                c = {
+                    "ckv": jnp.zeros((np_, batch, S_eff, cfg.kv_lora_rank), dtype),
+                    "kr": jnp.zeros((np_, batch, S_eff, cfg.rope_head_dim), dtype),
+                }
+            else:
+                c = {
+                    "k": jnp.zeros((np_, batch, S_eff, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    "v": jnp.zeros((np_, batch, S_eff, cfg.n_kv_heads, cfg.v_head_dim), dtype),
+                }
+        elif spec.kind == "cross":
+            c = {
+                "mk": jnp.zeros((np_, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "mv": jnp.zeros((np_, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.v_head_dim), dtype),
+            }
+        else:
+            c = {
+                "conv": jnp.zeros((np_, batch, cfg.ssm_conv_width - 1, ssm_lib.conv_dim(cfg)), dtype),
+                "state": jnp.zeros(
+                    (np_, batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state),
+                    jnp.float32,
+                ),
+            }
+        cache[str(pos)] = c
+    return cache
+
+
+def decode_step(params, cache: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ModelConfig, mesh=None):
+    """One decode step: tokens (B, 1) (or (B,1,n_q)); pos () int32 — the
+    absolute position being written. Attends over pos+1 cache entries.
+    Returns (logits, updated cache)."""
+    dtype = _dtype(cfg)
+    x = _embed(params, tokens, cfg, dtype)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    length = pos + 1
+
+    def period_body(x, xs):
+        block_params, pc = xs
+        new_pc = {}
+        for lpos, spec in enumerate(cfg.period):
+            lp = block_params[str(lpos)]
+            c = pc[str(lpos)]
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if spec.kind == "attn":
+                if cfg.attn_type == "mla":
+                    ckv_new, kr_new = attn_lib.mla_compress(lp["attn"], h, positions, cfg, dtype)
+                    ckv = jax.lax.dynamic_update_slice(
+                        c["ckv"], ckv_new.astype(c["ckv"].dtype), (0, pos, 0))
+                    kr = jax.lax.dynamic_update_slice(
+                        c["kr"], kr_new.astype(c["kr"].dtype), (0, pos, 0))
+                    o = attn_lib.mla_decode(lp["attn"], h, ckv, kr, length, positions, cfg, dtype)
+                    new_pc[str(lpos)] = {"ckv": ckv, "kr": kr}
+                else:
+                    q, k, v = attn_lib.gqa_qkv(lp["attn"], h, positions, cfg, dtype)
+                    buf = c["k"].shape[1]
+                    if spec.sliding_window and spec.sliding_window <= buf:
+                        # ring buffer: slot = pos mod window; all slots valid
+                        # once wrapped (every entry is within the window)
+                        slot = pos % jnp.asarray(buf, pos.dtype)
+                        eff_len = jnp.minimum(length, buf)
+                    else:
+                        slot, eff_len = pos, length
+                    ck = jax.lax.dynamic_update_slice(
+                        c["k"], k.astype(c["k"].dtype), (0, slot, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        c["v"], v.astype(c["v"].dtype), (0, slot, 0, 0))
+                    o = attn_lib.decode_attend(q[:, 0], ck, cv, eff_len)[:, None]
+                    o = attn_lib.gqa_out(lp["attn"], o, dtype)
+                    new_pc[str(lpos)] = {"k": ck, "v": cv}
+            elif spec.kind == "cross":
+                o = attn_lib.decode_attend(
+                    jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(dtype))[:, 0],
+                    c["mk"], c["mv"], jnp.asarray(c["mk"].shape[1]),
+                )[:, None]
+                o = attn_lib.gqa_out(lp["attn"], o, dtype)
+                o = jnp.tanh(lp["attn"]["gate"]).astype(dtype) * o
+                new_pc[str(lpos)] = c
+            else:
+                ssm_c = ssm_lib.SSMCache(conv=c["conv"], state=c["state"])
+                o, ssm_c = ssm_lib.mamba_decode(lp["mamba"], h, ssm_c, cfg, dtype)
+                new_pc[str(lpos)] = {"conv": ssm_c.conv, "state": ssm_c.state}
+            x = x + o
+            if "mlp" in lp or "moe" in lp:
+                h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+                if spec.moe:
+                    if mesh is not None and mesh.shape.get("model", 1) > 1:
+                        y, _ = moe_lib.moe_ffn_sharded(
+                            lp["moe"], h, cfg, dtype, mesh,
+                            weight_stationary=cfg.serve_weight_stationary,
+                        )
+                    else:
+                        y, _ = moe_lib.moe_ffn_local(lp["moe"], h, cfg, dtype)
+                else:
+                    y = L.mlp(lp["mlp"], h, dtype)
+                x = x + y
+        return x, new_pc
+
+    x, new_cache = jax.lax.scan(period_body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = _lm_head(params, cfg)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,qdv->bsqv", x, head.astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
+    return logits, new_cache

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    Optimizer,
+    adamw,
+    sgd,
+    momentum,
+    apply_updates,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)

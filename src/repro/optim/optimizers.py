@@ -1,0 +1,148 @@
+"""Optimizers from scratch (optax is not available offline).
+
+Pure-functional, pytree-based, optax-like API:
+
+    opt = adamw(lr=1e-3, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees so they pjit/shard_map transparently (each state
+leaf inherits the sharding of its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), ())
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, OptState(step, ())
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree_util.tree_map(
+            lambda mo, g: beta * mo + g.astype(jnp.float32), state.inner, grads
+        )
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda mo, g: -lr_t * (beta * mo + g), m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda mo: -lr_t * mo, m)
+        return upd, OptState(step, m)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: float | None = 1.0,
+    mask: Callable | None = None,   # path-predicate: apply weight decay?
+) -> Optimizer:
+    """AdamW with global-norm clipping and decoupled weight decay.
+
+    Optimizer moments are f32 regardless of param dtype (mixed-precision
+    convention: bf16 params / f32 master-state handled by the caller).
+    """
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            AdamState(
+                mu=jax.tree_util.tree_map(zeros, params),
+                nu=jax.tree_util.tree_map(zeros, params),
+            ),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.inner.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.inner.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if mask is None:
+            upd = jax.tree_util.tree_map(_upd, mu, nu, params)
+        else:
+            # decay only where mask(path) is True
+            flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+            gm = jax.tree_util.tree_leaves(mu)
+            gv = jax.tree_util.tree_leaves(nu)
+            upds = []
+            for (path, p), m, v in zip(flat, gm, gv):
+                wd = weight_decay if mask(path) else 0.0
+                u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                if wd:
+                    u = u - lr_t * wd * p.astype(jnp.float32)
+                upds.append(u)
+            upd = jax.tree_util.tree_unflatten(treedef, upds)
+        return upd, OptState(step, AdamState(mu, nu))
+
+    return Optimizer(init, update)

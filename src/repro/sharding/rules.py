@@ -1,0 +1,95 @@
+"""Logical-axis -> mesh-axis resolution.
+
+``init_params`` returns a spec tree whose leaves are tuples of logical axis
+names (one per tensor dim, or None). This module resolves them into
+``PartitionSpec``s for a concrete mesh, with a divisibility fallback: a dim
+whose size does not divide the target mesh-axis size is replicated (e.g.
+yi-34b's 56 heads or minicpm3's 73448 vocab on a 16-wide model axis — the
+fallback is recorded by the dry-run and padding them is a §Perf item).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis (train rules; "embed" is the FSDP dim)
+LOGICAL_RULES: dict[str, str | None] = {
+    "embed": "data",          # FSDP: weights gathered per layer
+    "embed_nodiv": None,      # embed-sized dims kept replicated (norms, router)
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "expert_ff": None,        # serve weight-stationary mode pins this to data
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+}
+
+# §Perf layout variants (see EXPERIMENTS.md):
+#   pure data-parallel over the whole mesh for small dense models — removes
+#   tensor-parallel activation all-reduces; batch spans (data, model)
+DP_OVERRIDES = {
+    "embed": ("data", "model"),
+    "ff": None, "heads": None, "kv_heads": None, "vocab": None,
+    "ssm_inner": None, "ssm_heads": None, "experts": None,
+}
+#   weight-stationary serving — weights resident (no FSDP gather); MoE
+#   expert hidden dim sharded over data (moe_ffn_sharded's ws path)
+SERVE_WS_OVERRIDES = {"embed": None, "expert_ff": "data"}
+
+
+def resolve_spec(
+    logical: tuple, shape: tuple[int, ...], mesh, *, fsdp: bool = True,
+    overrides: dict | None = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible dims."""
+    out = []
+    for name, size in zip(logical, shape):
+        if name and name.startswith("__mesh__"):   # direct mesh-axis pin
+            ax = name[len("__mesh__"):]
+        elif overrides and name in overrides:
+            ax = overrides[name]
+        else:
+            ax = LOGICAL_RULES.get(name) if name else None
+        if ax == "data" and not fsdp and not (overrides and name in overrides):
+            ax = None
+        axs = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        if not axs or any(a not in mesh.axis_names for a in axs):
+            out.append(None)
+            continue
+        n = 1
+        for a in axs:
+            n *= mesh.shape[a]
+        if size % n != 0:
+            out.append(None)     # divisibility fallback -> replicate
+            continue
+        out.append(ax)
+    return P(*out)
+
+
+def params_pspecs(spec_tree, params_tree, mesh, *, fsdp: bool = True,
+                  overrides: dict | None = None):
+    """Pytree of PartitionSpec aligned with params."""
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, str) or x is None for x in s
+    )
+    flat_specs, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_leaf)
+    flat_params = jax.tree_util.tree_leaves(params_tree)
+    assert len(flat_specs) == len(flat_params), (
+        len(flat_specs), len(flat_params),
+    )
+    resolved = [
+        resolve_spec(s, p.shape, mesh, fsdp=fsdp, overrides=overrides)
+        for s, p in zip(flat_specs, flat_params)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, resolved)
+
+
+def params_shardings(spec_tree, params_tree, mesh, *, fsdp: bool = True,
+                     overrides: dict | None = None):
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps),
+        params_pspecs(spec_tree, params_tree, mesh, fsdp=fsdp, overrides=overrides),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,30 @@
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_in_subprocess_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet with XLA host platform devices (the dry-run-style
+    device-count flag must never be set in THIS process — smoke tests and
+    benches are required to see the real single CPU device)."""
+    env = {
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/tmp",
+    }
+    import os
+    env = {**os.environ, **env}
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=str(REPO),
+    )
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{res.stdout[-4000:]}\nSTDERR:\n{res.stderr[-4000:]}"
+        )
+    return res.stdout

@@ -1,0 +1,119 @@
+"""Attention layer correctness: blockwise==dense, decode==train slice,
+MLA absorbed decode == expanded attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _dense_ref(q, k, v, causal=True, q_offset=0):
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = np.repeat(np.asarray(k, np.float32), G, axis=2)
+    vf = np.repeat(np.asarray(v, np.float32), G, axis=2)
+    s = np.einsum("bqhd,bshd->bhqs", np.asarray(q, np.float32), kf) / math.sqrt(hd)
+    if causal:
+        qpos = q_offset + np.arange(Sq)
+        mask = qpos[:, None] >= np.arange(Sk)[None]
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(64, 64), (128, 128), (96, 128), (128, 256)]),
+    st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+    st.booleans(), st.integers(0, 99),
+)
+def test_blockwise_matches_dense(sqk, heads, causal, seed):
+    Sq, Sk = sqk
+    if Sq > Sk:
+        return
+    H, KV = heads
+    rng = np.random.default_rng(seed)
+    B, hd = 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, KV, hd)), jnp.float32)
+    off = Sk - Sq
+    got = A.blockwise_attention(q, k, v, causal=causal, q_offset=off,
+                                q_chunk=32, kv_chunk=32)
+    want = _dense_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attend_matches_last_row():
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 33, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    # decode at position S-1 (length S)
+    got = A.decode_attend(q[:, 0], k, v, jnp.asarray(S))
+    want = _dense_ref(q, k, v, causal=True, q_offset=S - 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attend_respects_length_mask():
+    rng = np.random.default_rng(1)
+    B, S, H, KV, hd = 1, 16, 4, 4, 8
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    got8 = A.decode_attend(q, k, v, jnp.asarray(8))
+    # garbage beyond position 8 must not matter
+    k2 = k.at[:, 8:].set(999.0)
+    v2 = v.at[:, 8:].set(-999.0)
+    got8b = A.decode_attend(q, k2, v2, jnp.asarray(8))
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(got8b), rtol=1e-5)
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=64, attn_type="mla", kv_lora_rank=32,
+        rope_head_dim=8, v_head_dim=16, period=(LayerSpec(kind="attn"),),
+        compute_dtype="float32",
+    )
+
+
+def test_mla_absorbed_decode_matches_full():
+    """Absorbed-latent decode == expanded-KV attention at the last position."""
+    cfg = _mla_cfg()
+    params, _ = A.init_mla(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    B, S = 2, 12
+    x = jnp.asarray(rng.normal(0, 0.5, (B, S, cfg.d_model)), jnp.float32)
+    positions = jnp.arange(S)[None, :]
+    out_full, (ckv, kr) = A.mla_attend_full(params, x, positions, cfg,
+                                            jnp.float32, kv_chunk=64)
+    out_dec = A.mla_decode(
+        params, x[:, -1:], ckv, kr, jnp.asarray(S),
+        jnp.full((B, 1), S - 1), cfg, jnp.float32,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_dec[:, 0]), np.asarray(out_full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_cross_attend_gate_zero_init():
+    cfg = ModelConfig(
+        name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, n_image_tokens=8, period=(LayerSpec(kind="cross"),),
+        compute_dtype="float32",
+    )
+    params, _ = A.init_cross_attn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 6, 32)), jnp.float32)
+    media = jnp.asarray(rng.normal(size=(1, 8, 32)), jnp.float32)
+    out = A.cross_attend(params, x, media, cfg, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), 0.0)  # tanh(0) gate

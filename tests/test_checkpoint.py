@@ -1,0 +1,32 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "c": jnp.asarray(3)},
+        "list": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)],
+    }
+    ckpt.save(tmp_path / "step_3", tree, step=3)
+    like = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), tree)
+    out = ckpt.restore(tmp_path / "step_3", like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_restore_into_model_params(tmp_path):
+    from repro.configs import registry
+    from repro.models import config as mc, transformer
+    cfg = mc.reduced(registry.get_config("qwen1.5-4b"))
+    params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt.save(tmp_path / "step_1", params, step=1)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    back = ckpt.restore(tmp_path / "step_1", zeros)
+    a = jax.tree_util.tree_leaves(params)[0]
+    b = jax.tree_util.tree_leaves(back)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

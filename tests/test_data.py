@@ -1,0 +1,53 @@
+"""Synthetic POI generator + LM pipeline invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import lm_pipeline, synthetic_poi
+
+
+def test_poi_split_disjoint_and_sized():
+    ds = synthetic_poi.foursquare_like(reduced=True)
+    tr = {tuple(x) for x in ds.train}
+    te = {tuple(x) for x in ds.test}
+    assert not (tr & te)
+    n = len(tr) + len(te)
+    assert abs(len(te) / n - 0.10) < 0.03
+
+
+def test_poi_location_aggregation():
+    """Paper Fig. 2: most check-ins are in the user's home city."""
+    ds = synthetic_poi.foursquare_like(reduced=True)
+    allr = np.concatenate([ds.train, ds.test])
+    same = (ds.user_city[allr[:, 0]] == ds.item_city[allr[:, 1]]).mean()
+    assert same > 0.9, same
+
+
+def test_poi_indices_in_range():
+    ds = synthetic_poi.alipay_like(reduced=True)
+    allr = np.concatenate([ds.train, ds.test])
+    assert allr[:, 0].max() < ds.n_users and allr[:, 0].min() >= 0
+    assert allr[:, 1].max() < ds.n_items and allr[:, 1].min() >= 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 3))
+def test_poi_generator_deterministic(seed):
+    a = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=60, n_ratings=500, n_cities=4, seed=seed))
+    b = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=60, n_ratings=500, n_cities=4, seed=seed))
+    np.testing.assert_array_equal(a.train, b.train)
+    np.testing.assert_array_equal(a.user_coords, b.user_coords)
+
+
+def test_lm_pipeline_shapes_and_determinism():
+    cfg = lm_pipeline.LMDataConfig(vocab_size=128, seq_len=32, batch_size=4)
+    p = lm_pipeline.SyntheticLM(cfg)
+    b1 = p.batch(7)
+    b2 = p.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+    assert b1["tokens"].max() < 128
+    mb = p.batch(3, n_codebooks=4)
+    assert mb["tokens"].shape == (4, 32, 4)

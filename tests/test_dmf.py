@@ -1,0 +1,133 @@
+"""DMF core: gradients match autodiff of Eq. 6; Alg. 1 semantics; ablations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+
+
+def test_gradients_match_autodiff_single_rating():
+    """_batch_step's update for one rating == SGD on Eq. 6's per-sample loss
+    (sanity for Eqs. 9-11), with no neighbors (M = I)."""
+    I, J, K = 4, 5, 3
+    cfg = dmf.DMFConfig(n_users=I, n_items=J, dim=K, alpha=0.3, beta=0.2,
+                        gamma=0.1, lr=0.05, batch_size=1)
+    rng = np.random.default_rng(0)
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    P = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    Q = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    M = jnp.eye(I)
+    i, j, r, c = 2, 3, 0.8, 1.0
+
+    def loss(u_i, p_ij, q_ij):
+        pred = jnp.dot(u_i, p_ij + q_ij)
+        return (
+            0.5 * c * (r - pred) ** 2
+            + 0.5 * cfg.alpha * jnp.sum(u_i ** 2)
+            + 0.5 * cfg.beta * jnp.sum(p_ij ** 2)
+            + 0.5 * cfg.gamma * jnp.sum(q_ij ** 2)
+        )
+
+    gu, gp, gq = jax.grad(loss, argnums=(0, 1, 2))(U[i], P[i, j], Q[i, j])
+    U2, P2, Q2, _ = dmf._batch_step(
+        U.copy(), P.copy(), Q.copy(), M,
+        jnp.array([i]), jnp.array([j]), jnp.array([r], jnp.float32),
+        jnp.array([c], jnp.float32), cfg,
+    )
+    np.testing.assert_allclose(U2[i], U[i] - cfg.lr * gu, rtol=2e-5)
+    np.testing.assert_allclose(P2[i, j], P[i, j] - cfg.lr * gp, rtol=2e-5)
+    np.testing.assert_allclose(Q2[i, j], Q[i, j] - cfg.lr * gq, rtol=2e-5)
+    # untouched entries unchanged
+    np.testing.assert_allclose(P2[i, (j + 1) % J], P[i, (j + 1) % J])
+    np.testing.assert_allclose(U2[(i + 1) % I], U[(i + 1) % I])
+
+
+def test_neighbor_propagation_weights():
+    """Alg. 1 line 15: neighbor i' receives -θ·M[i,i']·∂L/∂p^i_j."""
+    I, J, K = 3, 2, 2
+    cfg = dmf.DMFConfig(n_users=I, n_items=J, dim=K, alpha=0.0, beta=0.0,
+                        gamma=0.0, lr=0.1, batch_size=1)
+    rng = np.random.default_rng(1)
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    P = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    Q = jnp.zeros((I, J, K), jnp.float32)
+    M = jnp.asarray([[1.0, 0.5, 0.0], [0.5, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    i, j, r = 0, 1, 1.0
+    pred = float(jnp.dot(U[i], P[i, j]))
+    gp = -(r - pred) * np.asarray(U[i])
+    _, P2, _, _ = dmf._batch_step(
+        U, P.copy(), Q, M, jnp.array([i]), jnp.array([j]),
+        jnp.array([r], jnp.float32), jnp.array([1.0], jnp.float32), cfg,
+    )
+    np.testing.assert_allclose(np.asarray(P2[1, j]), np.asarray(P[1, j]) - 0.1 * 0.5 * gp, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(P2[2, j]), np.asarray(P[2, j]), rtol=1e-6)
+
+
+def test_modes_freeze_partitions():
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=60, n_items=40, n_ratings=400, n_cities=3))
+    gcfg = graph.GraphConfig()
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    M = graph.walk_propagation_matrix(W, gcfg)
+    for mode in ["gdmf", "ldmf"]:
+        cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=4, mode=mode)
+        res = dmf.fit(cfg, ds.train, M, epochs=2)
+        if mode == "gdmf":
+            assert float(jnp.abs(res.state.Q).max()) == 0.0
+        else:
+            assert float(jnp.abs(res.state.P).max()) == 0.0
+
+
+def test_training_reduces_loss_and_beats_ldmf():
+    ds = synthetic_poi.foursquare_like(reduced=True)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    M = graph.walk_propagation_matrix(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=8,
+                        beta=0.1, gamma=0.01)
+    res = dmf.fit(cfg, ds.train, M, epochs=25)
+    assert res.train_losses[-1] < 0.5 * res.train_losses[0]
+    ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
+    lcfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=8,
+                         mode="ldmf", gamma=0.01)
+    lres = dmf.fit(lcfg, ds.train, M, epochs=25)
+    lev = dmf.evaluate(lres.state, ds.train, ds.test, ds.n_users, ds.n_items)
+    assert ev["R@10"] > lev["R@10"], (ev, lev)
+
+
+def test_negative_sampling_confidence():
+    cfg = dmf.DMFConfig(n_users=10, n_items=20, dim=4, neg_samples=3)
+    rng = np.random.default_rng(0)
+    train = np.stack([rng.integers(0, 10, 50), rng.integers(0, 20, 50)], 1)
+    ui, vj, r, conf = dmf.sample_epoch(train, cfg, rng)
+    assert len(ui) == 50 * 4
+    assert set(np.unique(r)) == {0.0, 1.0}
+    np.testing.assert_allclose(conf[r == 0], 1.0 / 3)
+    np.testing.assert_allclose(conf[r == 1], 1.0)
+
+
+def test_rating_privacy_no_rating_in_message():
+    """The gradient message ∂L/∂p^i_j = -(e)·u_i + β p^i_j does not reveal
+    r directly: identical for (r, pred) pairs with equal residual — the
+    paper's privacy argument. Check two different ratings with matching
+    residuals produce the same message."""
+    K = 4
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    p = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    q1 = jnp.zeros((K,))
+    # message depends on err = c(r - u·(p+q)); construct equal errs
+    from repro.kernels import ref
+    g1 = ref.dmf_grads_ref(u[None], p[None], q1[None],
+                           jnp.array([1.0]), jnp.array([0.5]), 0.1, 0.2, 0.3)[1]
+    # different r, different conf, same product err
+    pred = float(jnp.dot(u, p))
+    # err1 = 0.5*(1-pred); choose r2=0, c2 = err1/(0-pred)
+    err1 = 0.5 * (1 - pred)
+    c2 = err1 / (0.0 - pred)
+    g2 = ref.dmf_grads_ref(u[None], p[None], q1[None],
+                           jnp.array([0.0]), jnp.array([c2], dtype=jnp.float32),
+                           0.1, 0.2, 0.3)[1]
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5)

@@ -1,0 +1,54 @@
+"""Unit tests for the dry-run's HLO collective-bytes parser — the roofline's
+collective term depends on it, so pin its semantics."""
+import importlib
+import sys
+
+
+def _collective_bytes():
+    # import the parser without triggering dryrun's XLA_FLAGS side effect in
+    # this process: the env line only matters before first jax init, and jax
+    # is already initialized here with 1 device — but be safe and restore.
+    import os
+    old = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch.dryrun import collective_bytes
+        return collective_bytes
+    finally:
+        if old is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = old
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[16,2048]{1,0} all-gather(%p0), dim=1
+  %ar = bf16[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = f32[256]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s32[4,4]{1,0} all-to-all(%w), dimensions={0}
+  %ags = (f32[128]{0}, f32[128]{0}) all-gather-start(%q), dim=0
+  %agd = f32[128]{0} all-gather-done(%ags)
+  %not_a_collective = f32[999]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_counts_each_collective_once():
+    cb = _collective_bytes()
+    out = cb(HLO)
+    assert out["all-reduce"] == 1024 * 2          # bf16
+    assert out["reduce-scatter"] == 8 * 64 * 4
+    assert out["collective-permute"] == 256 * 4
+    assert out["all-to-all"] == 16 * 4
+    # all-gather: the plain op (16*2048*4) + the -start tuple (2*128*4);
+    # -done must NOT double count
+    assert out["all-gather"] == 16 * 2048 * 4 + 2 * 128 * 4
+
+
+def test_ignores_non_collectives():
+    cb = _collective_bytes()
+    out = cb("%x = f32[10]{0} add(%a, %b)\n%y = f32[5]{0} multiply(%a, %b)")
+    assert out == {}

@@ -1,0 +1,105 @@
+"""User adjacency graph + random-walk propagation (paper Eqs. 2-4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph
+
+
+def _toy(I=40, C=3, seed=0):
+    rng = np.random.default_rng(seed)
+    cities = rng.integers(0, C, size=I)
+    coords = (cities[:, None] * 100.0) + rng.normal(0, 1, (I, 2))
+    return coords.astype(np.float32), cities
+
+
+def test_adjacency_same_city_only():
+    coords, cities = _toy()
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=3))
+    idx = np.argwhere(W > 0)
+    assert len(idx) > 0
+    for i, j in idx:
+        assert cities[i] == cities[j], "Eq. 2 indicator violated"
+
+
+def test_adjacency_symmetric_no_selfloop():
+    coords, cities = _toy()
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=2))
+    assert np.allclose(W, W.T)
+    assert np.all(np.diag(W) == 0)
+
+
+def test_top_n_truncation_bounds_degree():
+    coords, cities = _toy(I=60)
+    N = 2
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=N))
+    # each user *selects* at most N neighbors; symmetrization can add
+    # unbounded in-edges (popular users), so the sharp bound is on the
+    # total edge count: <= 2 * N * I after max(W, W^T)
+    deg = (W > 0).sum(1)
+    assert (W > 0).sum() <= 2 * N * len(deg)
+    assert deg.mean() <= 2 * N
+
+
+def test_row_normalize_stochastic():
+    coords, cities = _toy()
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=2))
+    What = graph.row_normalize(W)
+    sums = What.sum(1)
+    nz = (W.sum(1) > 0)
+    assert np.allclose(sums[nz], 1.0, atol=1e-5)
+    assert np.allclose(sums[~nz], 0.0)
+
+
+def test_walk_matrix_includes_self_and_hops():
+    coords, cities = _toy()
+    cfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(coords, cities, cfg)
+    M = graph.walk_propagation_matrix(W, cfg)
+    assert np.allclose(np.diag(M) >= 1.0, True)   # line-11 self update
+    # row mass bounded: 1 (self) + D stochastic rows
+    assert M.sum(1).max() <= 1 + cfg.walk_length + 1e-4
+
+
+def test_walk_distance_monotone_reach():
+    coords, cities = _toy(I=80)
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=2))
+    reach = []
+    for D in [1, 2, 3, 4]:
+        cfg = graph.GraphConfig(n_neighbors=2, walk_length=D)
+        M = graph.walk_propagation_matrix(W, cfg)
+        reach.append((M > 1e-9).sum())
+    assert all(b >= a for a, b in zip(reach, reach[1:])), reach
+
+
+def test_paper_literal_amplifies():
+    coords, cities = _toy()
+    cfg_n = graph.GraphConfig(n_neighbors=2, walk_length=2)
+    cfg_l = graph.GraphConfig(n_neighbors=2, walk_length=2, paper_literal=True)
+    W = graph.build_adjacency(coords, cities, cfg_n)
+    Mn = graph.walk_propagation_matrix(W, cfg_n)
+    Ml = graph.walk_propagation_matrix(W, cfg_l)
+    assert Ml.sum() >= Mn.sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 60), st.integers(1, 4), st.integers(1, 4))
+def test_property_walk_row_mass(I, N, D):
+    rng = np.random.default_rng(I * 7 + N)
+    cities = rng.integers(0, 3, size=I)
+    coords = (cities[:, None] * 50.0 + rng.normal(0, 1, (I, 2))).astype(np.float32)
+    cfg = graph.GraphConfig(n_neighbors=N, walk_length=D)
+    W = graph.build_adjacency(coords, cities, cfg)
+    M = graph.walk_propagation_matrix(W, cfg)
+    # propagation mass of any sender is within [1, 1+D] (self + D hops)
+    assert (M.sum(1) <= 1 + D + 1e-4).all()
+    assert (M.sum(1) >= 1 - 1e-6).all()
+    assert np.isfinite(M).all()
+
+
+def test_communication_bytes_linear_in_ratings():
+    coords, cities = _toy(I=50)
+    W = graph.build_adjacency(coords, cities, graph.GraphConfig(n_neighbors=2))
+    b1 = graph.communication_bytes(W, D=3, K=10, n_ratings=1000)
+    b2 = graph.communication_bytes(W, D=3, K=10, n_ratings=2000)
+    assert b2 == 2 * b1

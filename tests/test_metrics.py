@@ -1,0 +1,65 @@
+"""P@k / R@k — hand example + hypothesis invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics
+
+
+def test_hand_example():
+    # 2 users, 6 items
+    scores = np.array([
+        [0.9, 0.8, 0.7, 0.1, 0.0, -1.0],
+        [0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+    ])
+    train = np.zeros((2, 6), bool)
+    train[0, 0] = True          # item 0 seen by user 0 -> excluded
+    test = np.zeros((2, 6), bool)
+    test[0, 1] = True           # hit at rank 1
+    test[0, 3] = True           # hit at rank 3
+    test[1, 0] = True           # user 1's test item ranked last -> miss@2
+    p2, r2 = metrics.precision_recall_at_k(scores, train, test, 2)
+    # user0 top2 (excl item0): [1,2] -> 1 hit -> P=0.5, R=1/2
+    # user1 top2: [5,4] -> 0 hits
+    assert np.isclose(p2, (0.5 + 0.0) / 2)
+    assert np.isclose(r2, (0.5 + 0.0) / 2)
+
+
+def test_users_without_test_items_excluded():
+    scores = np.random.default_rng(0).random((3, 5))
+    train = np.zeros((3, 5), bool)
+    test = np.zeros((3, 5), bool)
+    test[0, 1] = True
+    p, r = metrics.precision_recall_at_k(scores, train, test, 5)
+    assert r == 1.0  # only user 0 counts; all items recommended at k=5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 12), st.integers(5, 20), st.integers(1, 5),
+    st.integers(0, 10_000),
+)
+def test_property_bounds_and_monotone_recall(I, J, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=(I, J))
+    train = rng.random((I, J)) < 0.2
+    test = (rng.random((I, J)) < 0.2) & ~train
+    k = min(k, J)
+    p, r = metrics.precision_recall_at_k(scores, train, test, k)
+    assert 0.0 <= p <= 1.0 and 0.0 <= r <= 1.0
+    if k + 1 <= J:
+        _, r2 = metrics.precision_recall_at_k(scores, train, test, k + 1)
+        assert r2 >= r - 1e-9  # recall monotone in k
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 15), st.integers(0, 1000))
+def test_property_train_items_never_recommended(I, J, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=(I, J)) + 100.0  # make seen items attractive
+    train = rng.random((I, J)) < 0.3
+    k = min(3, J - int(train.sum(1).max()))
+    if k <= 0:
+        return
+    rec = np.asarray(metrics.topk_recommend(scores, train, k))
+    for i in range(I):
+        assert not train[i, rec[i]].any()

@@ -1,0 +1,126 @@
+"""§Perf optimization variants: numerics must match the baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from tests.conftest import run_in_subprocess_with_devices
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([64, 128, 256]), st.integers(0, 99))
+def test_triangular_matches_blockwise(S, seed):
+    rng = np.random.default_rng(seed)
+    B, H, KV, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    base = A.blockwise_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    tri = A.triangular_attention(q, k, v, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(tri), np.asarray(base),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_triangular_dispatch_through_config():
+    from repro.configs import registry
+    from repro.models import config as mc, transformer
+    cfg = mc.reduced(registry.get_config("qwen1.5-4b"), attn_chunk=32)
+    cfg_tri = dataclasses.replace(cfg, triangular_attention=True)
+    params, _ = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 64)),
+                      jnp.int32)
+    h1, _, _ = transformer.forward(params, tok, cfg)
+    h2, _, _ = transformer.forward(params, tok, cfg_tri)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-3, atol=2e-3)
+
+
+def test_weight_stationary_moe_matches_local_on_mesh():
+    run_in_subprocess_with_devices("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.models import moe
+from repro.models.config import LayerSpec, ModelConfig
+cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=0, vocab_size=64, n_routed_experts=8, n_shared_experts=1,
+    moe_top_k=2, moe_d_ff=32, period=(LayerSpec(kind="attn", moe=True),),
+    compute_dtype="float32", capacity_factor=8.0)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+params, _ = moe.init_moe(jax.random.PRNGKey(0), cfg)
+x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16, 64)), jnp.float32)
+y_loc, _ = moe.moe_ffn_local(params, x, cfg, jnp.float32)
+y_ws, _ = jax.jit(lambda p, x: moe.moe_ffn_sharded(
+    p, x, cfg, jnp.float32, mesh, weight_stationary=True))(params, x)
+np.testing.assert_allclose(np.asarray(y_loc), np.asarray(y_ws), rtol=2e-3, atol=2e-3)
+# batch=1 (long-context decode): tokens replicated, weights still F-sharded
+x1 = x[:1]
+y_loc1, _ = moe.moe_ffn_local(params, x1, cfg, jnp.float32)
+y_ws1, _ = jax.jit(lambda p, x: moe.moe_ffn_sharded(
+    p, x, cfg, jnp.float32, mesh, weight_stationary=True))(params, x1)
+np.testing.assert_allclose(np.asarray(y_loc1), np.asarray(y_ws1), rtol=2e-3, atol=2e-3)
+print("OK")
+""")
+
+
+def test_serve_ws_shardings_resident():
+    """SERVE_WS_OVERRIDES: no data axis on embed dims; expert_ff -> data."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.sharding import rules
+    mesh = AbstractMesh((2, 4), ("data", "model"))
+    spec = rules.resolve_spec(("experts", "embed", "expert_ff"), (8, 64, 32),
+                              mesh, overrides=rules.SERVE_WS_OVERRIDES)
+    assert spec == P("model", None, "data")
+    spec2 = rules.resolve_spec(("embed", "heads", None), (64, 8, 16),
+                               mesh, overrides=rules.SERVE_WS_OVERRIDES)
+    assert spec2 == P(None, "model", None)
+
+
+def test_sliding_window_decode_matches_banded_forward():
+    """yi-34b-swa carve-in: ring-buffer windowed decode == full forward with
+    the band mask (the long_500k-enabling path for a dense arch)."""
+    import dataclasses
+    from repro.configs import registry
+    from repro.models import config as mc, transformer
+    from repro.models.config import LayerSpec
+    cfg = mc.reduced(registry.get_config("yi-34b"), remat=False, attn_chunk=512)
+    Wn = 8
+    cfg_swa = dataclasses.replace(
+        cfg, period=(LayerSpec(kind="attn", sliding_window=Wn),))
+    assert cfg_swa.supports_long_context_decode
+    params, _ = transformer.init_params(cfg_swa, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 1, 20
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    h, _, _ = transformer.forward(params, tokens, cfg_swa)
+    full = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"].astype(h.dtype))
+    cache = transformer.init_cache(cfg_swa, B, S)
+    assert cache["0"]["k"].shape[2] == Wn  # O(window) memory
+    for t in range(S):
+        logits, cache = transformer.decode_step(
+            params, cache, tokens[:, t:t + 1], jnp.asarray(t, jnp.int32), cfg_swa)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(full),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_blockwise_window_mask_matches_dense():
+    rng = np.random.default_rng(4)
+    B, S, H, KV, hd, Wn = 1, 96, 4, 2, 16, 24
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    got = A.blockwise_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32,
+                                window=Wn)
+    # dense banded reference
+    import math
+    G = H // KV
+    kf = np.repeat(np.asarray(k), G, 2)
+    vf = np.repeat(np.asarray(v), G, 2)
+    s = np.einsum("bqhd,bshd->bhqs", np.asarray(q), kf) / math.sqrt(hd)
+    qpos = np.arange(S)
+    mask = (qpos[:, None] >= qpos[None, :]) & ((qpos[:, None] - qpos[None, :]) < Wn)
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True)); p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqs,bshd->bqhd", p, vf)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)

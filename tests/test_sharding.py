@@ -1,0 +1,110 @@
+"""Distribution tests (deliverable e support): lowering + compiling on a
+multi-device host mesh for representative (arch-family × step-kind) pairs,
+and sharding-rule unit behaviour. Heavy lowers run in a subprocess so this
+process keeps seeing exactly one device."""
+import jax
+import numpy as np
+import pytest
+
+from tests.conftest import run_in_subprocess_with_devices
+
+
+def test_rules_divisibility_fallback():
+    """56 heads on a 4-wide model axis -> replicated, not an error."""
+    from jax.sharding import PartitionSpec as P
+    code_free_mesh = None
+    # use a host mesh in-process is not allowed (single device) -> build an
+    # abstract mesh for spec resolution only
+    from jax.sharding import AbstractMesh
+    mesh = AbstractMesh((2, 16), ("data", "model"))
+    from repro.sharding import rules
+    # yi-34b: 56 heads on a 16-wide model axis -> replicate (56 % 16 != 0)
+    spec = rules.resolve_spec(("embed", "heads", None), (64, 56, 16), mesh)
+    assert spec == P("data", None, None)
+    spec2 = rules.resolve_spec(("embed", "heads", None), (64, 32, 16), mesh)
+    assert spec2 == P("data", "model", None)
+    spec3 = rules.resolve_spec(("vocab", "embed_nodiv"), (1000, 63), mesh)
+    assert spec3 == P(None, None)  # 1000 % 16 != 0 -> fallback
+    spec3b = rules.resolve_spec(("vocab", "embed_nodiv"), (1024, 63), mesh)
+    assert spec3b == P("model", None)
+    # direct mesh-axis pin (gossip learner axis)
+    spec4 = rules.resolve_spec(("__mesh__data", "ff"), (2, 64), mesh)
+    assert spec4 == P("data", "model")
+
+
+def test_make_production_mesh_shapes():
+    """Mesh constructors produce the contracted shapes (checked abstractly —
+    this process has one real device, so only validate the spec)."""
+    from repro.launch import mesh as mesh_lib
+    import inspect
+    src = inspect.getsource(mesh_lib.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src
+
+
+@pytest.mark.slow
+def test_lower_all_step_kinds_small_mesh():
+    run_in_subprocess_with_devices("""
+import jax
+from repro.configs import registry
+from repro.models import transformer, config as mc
+from repro.launch import specs as specs_lib
+from repro.launch.train import make_train_step, TrainState
+from repro.launch.serve import make_decode_step, make_prefill_step, serve_param_shardings
+from repro.launch.dryrun import _state_shardings
+from repro.models.config import InputShape
+from repro.optim import adamw
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+REDUCED = {
+  "minitron-4b": dict(n_kv_heads=4, vocab_size=512),
+  "deepseek-v2-236b": dict(vocab_size=512, n_routed_experts=8),
+  "jamba-1.5-large-398b": dict(vocab_size=512, n_routed_experts=8, ssm_head_dim=64, n_kv_heads=4),
+}
+def sds(cfg, pshard):
+    ps, _ = transformer.abstract_params(cfg)
+    return jax.tree_util.tree_map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), ps, pshard)
+for arch, over in REDUCED.items():
+    cfg = mc.reduced(registry.get_config(arch), **over)
+    for kind, S, B in [("train", 256, 8), ("decode", 512, 8)]:
+        shape = InputShape(kind, S, B, "train" if kind == "train" else "decode")
+        if kind == "train":
+            step, _, pshard = make_train_step(cfg, mesh, adamw(3e-4))
+            batch = specs_lib.batch_specs(cfg, shape, mesh)
+            ps, _ = transformer.abstract_params(cfg)
+            opt = jax.eval_shape(adamw(3e-4).init, ps)
+            st = TrainState(ps, opt)
+            st = jax.tree_util.tree_map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), st, _state_shardings(st, pshard))
+            step.lower(st, batch).compile()
+        else:
+            pshard = serve_param_shardings(cfg, mesh)
+            cache, cps, tokens, pos = specs_lib.decode_specs(cfg, shape, mesh)
+            make_decode_step(cfg, mesh, cps).lower(sds(cfg, pshard), cache, tokens, pos).compile()
+    print("OK", arch)
+""", n_devices=8, timeout=1200)
+
+
+@pytest.mark.slow
+def test_train_step_executes_and_loss_drops_on_mesh():
+    """Not just lowering: a real sharded training run on 8 host devices."""
+    run_in_subprocess_with_devices("""
+import jax, jax.numpy as jnp
+from repro.configs import registry
+from repro.data.lm_pipeline import LMDataConfig, SyntheticLM
+from repro.launch.train import make_train_step
+from repro.models import config as mc
+from repro.optim import adamw
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = mc.reduced(registry.get_config("minitron-4b"), n_kv_heads=4, vocab_size=256,
+                 d_model=128, d_ff=256, n_heads=4, head_dim=32)
+step, init_fn, _ = make_train_step(cfg, mesh, adamw(3e-3))
+state = init_fn(jax.random.PRNGKey(0))
+data = SyntheticLM(LMDataConfig(vocab_size=256, seq_len=64, batch_size=8))
+losses = []
+for i in range(25):
+    state, m = step(state, {k: jnp.asarray(v) for k, v in data.batch(i).items()})
+    losses.append(float(m["loss"]))
+assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+print("OK", losses[0], "->", losses[-1])
+""", n_devices=8, timeout=900)
