@@ -21,18 +21,16 @@ def main(full: bool = False):
         ds = synthetic_poi.generate(cfg_d)
         gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
         W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
-        M = graph.walk_propagation_matrix(W, gcfg)
+        nbr = graph.walk_neighbor_table(W, gcfg)   # convert once, not per epoch
         K = 10
         comm = graph.communication_bytes(W, D=3, K=K, n_ratings=len(ds.train))
         cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=K,
                             beta=0.1, gamma=0.01)
         rng = np.random.default_rng(0)
         state = dmf.init_state(cfg, rng)
-        import jax.numpy as jnp
-        Mj = jnp.asarray(M)
-        state, _ = dmf.train_epoch(state, Mj, ds.train, cfg, rng)  # warmup/jit
+        state, _ = dmf.train_epoch(state, nbr, ds.train, cfg, rng)  # warmup/jit
         t0 = time.perf_counter()
-        state, _ = dmf.train_epoch(state, Mj, ds.train, cfg, rng)
+        state, _ = dmf.train_epoch(state, nbr, ds.train, cfg, rng)
         dt = time.perf_counter() - t0
         rows.append({
             "n_train": int(len(ds.train)),

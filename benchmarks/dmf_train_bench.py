@@ -1,0 +1,102 @@
+"""DMF training-path benchmark: seed dense per-batch loop vs the
+sparse-neighborhood scan epoch vs sparse-scan + fused Pallas step.
+
+Measures epochs/sec at a Foursquare-scale synthetic config (default
+I=2048, J=1024, K=10, N=2, D=3 — the perf-trajectory anchor) and checks
+the train/test loss trajectories of the fast paths against the dense
+reference (must agree within 1e-4). Writes ``BENCH_dmf_train.json`` to
+benchmarks/results/ and the repo root.
+
+    PYTHONPATH=src python -m benchmarks.dmf_train_bench
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _time_epochs(epoch_fn, state, n_timed: int, cfg, train, prop):
+    """Warm up one epoch (jit/compile), then time n_timed epochs."""
+    rng = np.random.default_rng(123)
+    state, _ = epoch_fn(state, prop, train, cfg, rng)
+    jax.block_until_ready(state.U)
+    t0 = time.perf_counter()
+    for _ in range(n_timed):
+        state, _ = epoch_fn(state, prop, train, cfg, rng)
+    jax.block_until_ready(state.U)
+    dt = time.perf_counter() - t0
+    return n_timed / dt
+
+
+def main(full: bool = False, n_timed: int = 3, n_check: int = 4) -> dict:
+    if full:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=6524, n_items=3197, n_ratings=26186, n_cities=117)
+    else:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=2048, n_items=1024, n_ratings=12000, n_cities=16)
+    ds = synthetic_poi.generate(dcfg)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    M = graph.walk_propagation_matrix(W, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+    cfg_pl = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                           beta=0.1, gamma=0.01, use_pallas=True)
+    Mj = jnp.asarray(M)
+
+    eps = {}
+    eps["dense_per_batch"] = _time_epochs(
+        dmf.train_epoch_dense, dmf.init_state(cfg), n_timed, cfg, ds.train, Mj)
+    eps["sparse_scan"] = _time_epochs(
+        dmf.train_epoch, dmf.init_state(cfg), n_timed, cfg, ds.train, nbr)
+    eps["sparse_scan_pallas"] = _time_epochs(
+        dmf.train_epoch, dmf.init_state(cfg_pl), n_timed, cfg_pl, ds.train, nbr)
+
+    # loss-trajectory equivalence: fast paths vs the dense reference
+    rd = dmf.fit(cfg, ds.train, M, epochs=n_check, test=ds.test,
+                 dense_reference=True)
+    rs = dmf.fit(cfg, ds.train, nbr, epochs=n_check, test=ds.test)
+    rp = dmf.fit(cfg_pl, ds.train, nbr, epochs=n_check, test=ds.test)
+
+    def _maxdiff(a, b):
+        return float(np.abs(np.asarray(a) - np.asarray(b)).max())
+
+    res = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items, "dim": cfg.dim,
+            "n_neighbors": gcfg.n_neighbors, "walk_length": gcfg.walk_length,
+            "n_train": int(len(ds.train)), "batch_size": cfg.batch_size,
+            "neighbor_table_width_S": int(nbr.idx.shape[1]),
+        },
+        "epochs_per_sec": eps,
+        "speedup_sparse_vs_dense": eps["sparse_scan"] / eps["dense_per_batch"],
+        "speedup_pallas_vs_dense": eps["sparse_scan_pallas"] / eps["dense_per_batch"],
+        "train_loss_max_diff_sparse": _maxdiff(rd.train_losses, rs.train_losses),
+        "test_loss_max_diff_sparse": _maxdiff(rd.test_losses, rs.test_losses),
+        "train_loss_max_diff_pallas": _maxdiff(rd.train_losses, rp.train_losses),
+        "test_loss_max_diff_pallas": _maxdiff(rd.test_losses, rp.test_losses),
+        "train_losses_dense": rd.train_losses,
+        "train_losses_sparse": rs.train_losses,
+    }
+    common.save_json("BENCH_dmf_train", res)
+    (ROOT / "BENCH_dmf_train.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print(json.dumps({k: v for k, v in r.items()
+                      if not k.startswith("train_losses")}, indent=1))

@@ -35,6 +35,15 @@ def main():
     rows.append(("dmf_grads_kernel", _time(f_k), f"max_err={err:.2e}"))
     rows.append(("dmf_grads_ref", _time(f_r), ""))
 
+    f_k = lambda: ops.dmf_fused_step(u, p, q, r, c, theta=0.1, alpha=0.1,
+                                     beta=0.01, gamma=0.01)
+    f_r = lambda: ref.dmf_fused_step_ref(u, p, q, r, c, 0.1, 0.1, 0.01, 0.01)
+    err = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(f_k(), f_r())
+    )
+    rows.append(("dmf_fused_step_kernel", _time(f_k), f"max_err={err:.2e}"))
+    rows.append(("dmf_fused_step_ref", _time(f_r), ""))
+
     I, F = 512, 1024
     M = jnp.asarray(rng.normal(size=(I, I)), jnp.float32)
     X = jnp.asarray(rng.normal(size=(I, F)), jnp.float32)
@@ -55,6 +64,18 @@ def main():
     err = float(jnp.abs(vk - vr).max())
     rows.append(("topk_scores_kernel", _time(f_k), f"max_err={err:.2e}"))
     rows.append(("topk_scores_ref", _time(f_r), ""))
+
+    I, J, K = 256, 512, 10
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    Vp = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    mask = jnp.asarray(rng.random((I, J)) < 0.05)
+    f_k = lambda: ops.recommend_topk_peruser(U, Vp, mask, 10)
+    f_r = lambda: ref.topk_scores_peruser_ref(U, Vp, mask, 10)
+    vk, _ = f_k()
+    vr, _ = f_r()
+    err = float(jnp.abs(vk - vr).max())
+    rows.append(("topk_peruser_kernel", _time(f_k), f"max_err={err:.2e}"))
+    rows.append(("topk_peruser_ref", _time(f_r), ""))
     return rows
 
 

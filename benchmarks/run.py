@@ -86,6 +86,21 @@ def main() -> None:
                 + f";stable_after_3={r['stable_after_3']}"
             )
 
+    if want("dmf_train"):
+        from benchmarks import dmf_train_bench
+        _section("dmf_train (sparse-scan vs seed dense hot path)")
+        t0 = time.perf_counter()
+        res = dmf_train_bench.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        e = res["epochs_per_sec"]
+        print(
+            f"dmf_train,{us:.0f},"
+            f"dense={e['dense_per_batch']:.3f}eps;sparse={e['sparse_scan']:.3f}eps;"
+            f"pallas={e['sparse_scan_pallas']:.3f}eps;"
+            f"speedup={res['speedup_sparse_vs_dense']:.1f}x;"
+            f"loss_dev={res['train_loss_max_diff_sparse']:.2e}"
+        )
+
     if want("complexity"):
         from benchmarks import complexity
         _section("complexity (paper §Complexity)")

@@ -16,17 +16,19 @@ def main():
     print(f"users={ds.n_users} POIs={ds.n_items} "
           f"train={len(ds.train)} test={len(ds.test)}")
 
-    # 2. the user adjacency graph from geography (same city, N nearest)
+    # 2. the user adjacency graph from geography (same city, N nearest),
+    #    exported as the compact D-hop neighbor table each learner ships to
     gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
     W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
-    M = graph.walk_propagation_matrix(W, gcfg)   # includes line-11 self term
+    nbr = graph.walk_neighbor_table(W, gcfg)   # includes line-11 self term
+    print(f"max gradient fan-out 1+|N^D(i)| = {nbr.idx.shape[1]}")
 
-    # 3. decentralized training (vectorized Alg. 1)
+    # 3. decentralized training (vectorized Alg. 1, one scan per epoch)
     cfg = dmf.DMFConfig(
         n_users=ds.n_users, n_items=ds.n_items, dim=10,
         alpha=0.1, beta=0.1, gamma=0.01, lr=0.1, neg_samples=3,
     )
-    res = dmf.fit(cfg, ds.train, M, epochs=60, test=ds.test)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=60, test=ds.test)
     print(f"train loss {res.train_losses[0]:.4f} -> {res.train_losses[-1]:.4f}")
 
     # 4. evaluate — and compare with centralized MF

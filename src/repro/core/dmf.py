@@ -65,6 +65,8 @@ class DMFConfig:
     mode: str = "dmf"                # dmf | gdmf | ldmf
     init_scale: float = 0.1
     seed: int = 0
+    use_pallas: bool = False         # fused Pallas step kernel (ops.dmf_fused_step)
+    pallas_interpret: bool = True    # interpret=True on CPU; False on real TPU
 
     def __post_init__(self):
         assert self.mode in ("dmf", "gdmf", "ldmf"), self.mode
@@ -97,7 +99,28 @@ def init_state(cfg: DMFConfig, rng: np.random.Generator | None = None) -> DMFSta
 
 # ---------------------------------------------------------------------------
 # One minibatch step of Algorithm 1 (lines 6-16), vectorized.
+#
+# Two implementations:
+#   * `_batch_step` — dense reference (seed): propagates every gradient
+#     through the full (I, I) walk matrix, O(I·B·K) per batch. Kept as the
+#     equivalence oracle and for `fit(..., dense_reference=True)`.
+#   * `_sparse_batch_update` — production path: gathers each sender's
+#     compact neighbor row from a `graph.NeighborTable` and scatter-adds
+#     into P, O(B·S·K) per batch (S = max 1+|N^D|; see DESIGN.md §5).
 # ---------------------------------------------------------------------------
+def _grads_and_loss(u, p, q, r, conf, cfg: DMFConfig):
+    """Eqs. 9-11 gradients and batch loss for gathered (B, K) factors —
+    the single definition shared by the dense and sparse step paths (the
+    equivalence tests compare the two, so they must share this math)."""
+    v = p + q
+    err = conf * (r - jnp.sum(u * v, axis=-1))  # confidence-weighted residual
+    gu = -err[:, None] * v + cfg.alpha * u
+    gp = -err[:, None] * u + cfg.beta * p
+    gq = -err[:, None] * u + cfg.gamma * q
+    loss = 0.5 * jnp.sum(conf * (r - jnp.sum(u * v, -1)) ** 2)
+    return gu, gp, gq, loss
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
 def _batch_step(
     U: jnp.ndarray,
@@ -114,14 +137,7 @@ def _batch_step(
     u = U[ui]                                  # (B, K)
     p = P[ui, vj]                              # (B, K)
     q = Q[ui, vj]                              # (B, K)
-    v = p + q
-    err = conf * (r - jnp.sum(u * v, axis=-1))  # confidence-weighted residual
-    # Eqs. 9-11
-    gu = -err[:, None] * v + cfg.alpha * u
-    gp = -err[:, None] * u + cfg.beta * p
-    gq = -err[:, None] * u + cfg.gamma * q
-
-    loss = 0.5 * jnp.sum(conf * (r - jnp.sum(u * v, -1)) ** 2)
+    gu, gp, gq, loss = _grads_and_loss(u, p, q, r, conf, cfg)
 
     U = U.at[ui].add(-theta * gu)
     if cfg.mode != "gdmf":
@@ -133,6 +149,68 @@ def _batch_step(
         upd = A.T[:, :, None] * gp[None, :, :]  # (I, B, K)
         P = P.at[:, vj].add(-theta * upd)
     return U, P, Q, loss
+
+
+def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig):
+    """One minibatch of Alg. 1 against the sparse neighbor table.
+
+    Identical math to `_batch_step`; only the line 13-15 propagation differs:
+    instead of weighting gp by a full (I,) column of M, each sender's (S,)
+    receiver row is gathered and scatter-added — padded self-index slots
+    carry weight 0 and are exact no-ops.
+    """
+    theta = cfg.lr
+    if cfg.use_pallas:
+        from repro.kernels import ops
+        du, gp, dq, loss = ops.dmf_fused_step(
+            U[ui], P[ui, vj], Q[ui, vj], r, conf,
+            theta=theta, alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
+            interpret=cfg.pallas_interpret,
+        )
+    else:
+        gu, gp, gq, loss = _grads_and_loss(U[ui], P[ui, vj], Q[ui, vj], r, conf, cfg)
+        du = -theta * gu
+        dq = -theta * gq
+    U = U.at[ui].add(du)
+    if cfg.mode != "gdmf":
+        Q = Q.at[ui, vj].add(dq)
+    if cfg.mode != "ldmf":
+        # lines 11 + 13-15 via the neighbor table: sender b's gradient gp[b]
+        # lands on its S receivers at item vj[b], weighted by the walk weight.
+        nb = nbr_idx[ui]                           # (B, S) receiver users
+        wb = nbr_wgt[ui]                           # (B, S) walk weights
+        upd = wb[:, :, None] * gp[:, None, :]      # (B, S, K)
+        P = P.at[nb, vj[:, None]].add(-theta * upd)
+    return U, P, Q, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+def _epoch_scan(
+    U: jnp.ndarray,
+    P: jnp.ndarray,
+    Q: jnp.ndarray,
+    nbr_idx: jnp.ndarray,      # (I, S)
+    nbr_wgt: jnp.ndarray,      # (I, S)
+    ui: jnp.ndarray,           # (n_batches, B)
+    vj: jnp.ndarray,
+    r: jnp.ndarray,
+    conf: jnp.ndarray,
+    cfg: DMFConfig,
+):
+    """A full epoch as one device-resident `lax.scan` over minibatches —
+    one dispatch per epoch instead of a Python loop with a host sync
+    (`float(loss)`) per batch. Returns stacked per-batch losses."""
+
+    def body(carry, batch):
+        U, P, Q = carry
+        b_ui, b_vj, b_r, b_conf = batch
+        U, P, Q, loss = _sparse_batch_update(
+            U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg
+        )
+        return (U, P, Q), loss
+
+    (U, P, Q), losses = jax.lax.scan(body, (U, P, Q), (ui, vj, r, conf))
+    return U, P, Q, losses
 
 
 def sample_epoch(
@@ -155,13 +233,16 @@ def sample_epoch(
     return ui[order], vj[order], r[order], conf[order]
 
 
-def train_epoch(
+def train_epoch_dense(
     state: DMFState,
     M: jnp.ndarray,
     train: np.ndarray,
     cfg: DMFConfig,
     rng: np.random.Generator,
 ) -> tuple[DMFState, float]:
+    """Seed reference path: Python per-batch loop over the dense (I, I) M,
+    with a host sync per batch. O(I·B·K) per batch — kept as the
+    equivalence oracle for the sparse-scan path and for ablations."""
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
     n = (len(ui) // B) * B
@@ -177,6 +258,40 @@ def train_epoch(
             cfg,
         )
         total += float(loss)
+    return DMFState(U, P, Q), total / max(n, 1)
+
+
+def _as_neighbor_table(prop) -> graph_lib.NeighborTable:
+    if isinstance(prop, graph_lib.NeighborTable):
+        return prop
+    return graph_lib.neighbor_table_from_dense(np.asarray(prop))
+
+
+def train_epoch(
+    state: DMFState,
+    prop,                       # graph.NeighborTable, or dense (I, I) M
+    train: np.ndarray,
+    cfg: DMFConfig,
+    rng: np.random.Generator,
+) -> tuple[DMFState, float]:
+    """Sparse-neighborhood scan epoch: one jitted dispatch for the whole
+    epoch, O(B·S·K) propagation per batch. Passing a dense M converts it
+    per call — convert once via `graph.walk_neighbor_table` in loops."""
+    nbr = _as_neighbor_table(prop)
+    ui, vj, r, conf = sample_epoch(train, cfg, rng)
+    B = cfg.batch_size
+    nb = len(ui) // B
+    n = nb * B
+    shape = (nb, B)
+    U, P, Q, losses = _epoch_scan(
+        state.U, state.P, state.Q, nbr.idx, nbr.wgt,
+        jnp.asarray(ui[:n].reshape(shape)),
+        jnp.asarray(vj[:n].reshape(shape)),
+        jnp.asarray(r[:n].reshape(shape)),
+        jnp.asarray(conf[:n].reshape(shape)),
+        cfg,
+    )
+    total = float(np.asarray(losses, dtype=np.float64).sum())
     return DMFState(U, P, Q), total / max(n, 1)
 
 
@@ -210,13 +325,25 @@ def fit(
     test: np.ndarray | None = None,
     callback: Callable | None = None,
     seed: int | None = None,
+    dense_reference: bool = False,
 ) -> FitResult:
+    """Train `epochs` epochs of Alg. 1. `M` may be a dense (I, I) propagation
+    matrix or a `graph.NeighborTable`; the sparse scan path is the default,
+    `dense_reference=True` forces the seed dense per-batch loop (oracle)."""
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     state = init_state(cfg, rng)
-    Mj = jnp.asarray(M)
+    if dense_reference:
+        assert not isinstance(M, graph_lib.NeighborTable), (
+            "dense_reference needs the dense M"
+        )
+        prop = jnp.asarray(M)
+        epoch_fn = train_epoch_dense
+    else:
+        prop = _as_neighbor_table(M)
+        epoch_fn = train_epoch
     tr_losses, te_losses = [], []
     for t in range(epochs):
-        state, l = train_epoch(state, Mj, train, cfg, rng)
+        state, l = epoch_fn(state, prop, train, cfg, rng)
         tr_losses.append(l)
         if test is not None:
             te_losses.append(test_loss(state, test))
@@ -227,8 +354,28 @@ def fit(
 
 def evaluate(
     state: DMFState, train: np.ndarray, test: np.ndarray, n_users: int, n_items: int,
+    ks=(5, 10), interpret: bool = True,
+) -> dict[str, float]:
+    """Ranking metrics via the streaming top-k kernel: the (I, J) score
+    matrix never materializes — per-user running top-k is carried across
+    item tiles (ops.recommend_topk_peruser)."""
+    from repro.kernels import ops
+    train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
+    test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+    kmax = max(ks)
+    V = state.P + state.Q                     # (I, J, K) per-learner factors
+    _, idx = ops.recommend_topk_peruser(
+        state.U, V, jnp.asarray(train_mask), kmax, interpret=interpret
+    )
+    return metrics_lib.evaluate_ranking_from_topk(np.asarray(idx), test_mask, ks)
+
+
+def evaluate_dense(
+    state: DMFState, train: np.ndarray, test: np.ndarray, n_users: int, n_items: int,
     ks=(5, 10),
 ) -> dict[str, float]:
+    """Seed reference evaluation through the dense (I, J) score matrix —
+    oracle for the streaming path."""
     sc = np.asarray(scores(state.U, state.P, state.Q))
     train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
     test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)

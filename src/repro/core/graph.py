@@ -23,6 +23,7 @@ damping c^d, and keep the literal form behind ``paper_literal=True``
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -116,11 +117,67 @@ def walk_propagation_matrix(W: np.ndarray, cfg: GraphConfig) -> np.ndarray:
     return M.astype(np.float32)
 
 
+class NeighborTable(NamedTuple):
+    """Compact multi-hop neighborhood of the propagation matrix M.
+
+    ``idx[i, s]`` lists the receivers of user i's gradient message (self
+    first is not guaranteed — order follows column index) and ``wgt[i, s]``
+    the walk weight M[i, idx[i, s]]. Rows are padded to the max realized
+    ``1 + |N^D(i)|`` with the sender's own index at weight 0, so a padded
+    slot scatter-adds exactly zero (a no-op) — see DESIGN.md §5.
+    """
+
+    idx: jnp.ndarray   # (I, S) int32
+    wgt: jnp.ndarray   # (I, S) float32
+
+
+def neighbor_table_from_dense(M: np.ndarray) -> NeighborTable:
+    """Extract the (idx, wgt) neighbor table from a dense propagation matrix.
+
+    M's zero pattern is exact (walk powers of a nonnegative sparse adjacency
+    never produce spurious nonzeros), so nnz(row i) == 1 + |N^D(i)|.
+    """
+    M = np.asarray(M)
+    I = M.shape[0]
+    nz = M != 0.0
+    S = max(int(nz.sum(axis=1).max()) if I else 0, 1)
+    # stable argsort puts nonzero columns first, in ascending column order
+    order = np.argsort(~nz, axis=1, kind="stable")[:, :S]
+    taken = np.take_along_axis(nz, order, axis=1)
+    self_idx = np.arange(I, dtype=np.int64)[:, None]
+    idx = np.where(taken, order, self_idx)
+    wgt = np.where(taken, np.take_along_axis(M, order, axis=1), 0.0)
+    return NeighborTable(
+        idx=jnp.asarray(idx, jnp.int32), wgt=jnp.asarray(wgt, jnp.float32)
+    )
+
+
+def walk_neighbor_table(W: np.ndarray, cfg: GraphConfig) -> NeighborTable:
+    """Sparse export of ``walk_propagation_matrix``: per-sender receiver
+    indices and weights, shape (I, S) with S = max realized 1 + |N^D(i)|.
+
+    This is the structure the decentralized protocol actually ships — each
+    learner knows only its D-hop neighborhood — and the asymptotic enabler
+    for the sparse training path: per-rating propagation work is O(S·K),
+    not O(I·K)."""
+    return neighbor_table_from_dense(walk_propagation_matrix(W, cfg))
+
+
+def dense_from_neighbor_table(nbr: NeighborTable, n_users: int) -> np.ndarray:
+    """Reconstruct the dense (I, I) M — test/debug helper (inverse of
+    ``neighbor_table_from_dense`` up to padded zero-weight slots)."""
+    M = np.zeros((n_users, n_users), dtype=np.float32)
+    idx = np.asarray(nbr.idx)
+    wgt = np.asarray(nbr.wgt)
+    rows = np.repeat(np.arange(n_users), idx.shape[1])
+    np.add.at(M, (rows, idx.reshape(-1)), wgt.reshape(-1))
+    return M
+
+
 def neighbor_counts(W: np.ndarray, max_d: int) -> np.ndarray:
     """|N^d(i)| for d=1..max_d — used by the complexity benchmark."""
     I = W.shape[0]
     A = (W > 0).astype(np.float64)
-    reach_prev = np.eye(I, dtype=bool)
     reached = np.eye(I, dtype=bool)
     counts = np.zeros((max_d, I), dtype=np.int64)
     Ad = np.eye(I)

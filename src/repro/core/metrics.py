@@ -30,7 +30,22 @@ def precision_recall_at_k(
 ) -> tuple[float, float]:
     """Mean P@k and R@k over users with >=1 test item."""
     rec = np.asarray(topk_recommend(jnp.asarray(scores), jnp.asarray(train_mask), k))
-    hits = np.take_along_axis(test_mask, rec, axis=1).sum(axis=1)  # |S^T ∩ S^R|
+    return precision_recall_from_topk(rec, test_mask, k)
+
+
+def precision_recall_from_topk(
+    rec: np.ndarray,
+    test_mask: np.ndarray,
+    k: int,
+) -> tuple[float, float]:
+    """P@k / R@k from precomputed top-K indices (K >= k, descending score
+    order, so the first k columns are the top-k). Slots that never filled
+    (idx < 0, fewer than K candidates) count as misses."""
+    assert rec.shape[1] >= k, (rec.shape, k)
+    rec_k = np.asarray(rec[:, :k])
+    filled = rec_k >= 0
+    safe = np.where(filled, rec_k, 0)
+    hits = (np.take_along_axis(test_mask, safe, axis=1) & filled).sum(axis=1)
     n_test = test_mask.sum(axis=1)
     valid = n_test > 0
     if not valid.any():
@@ -38,6 +53,17 @@ def precision_recall_at_k(
     p_at_k = float((hits[valid] / k).mean())
     r_at_k = float((hits[valid] / n_test[valid]).mean())
     return p_at_k, r_at_k
+
+
+def evaluate_ranking_from_topk(rec, test_mask, ks=(5, 10)) -> dict[str, float]:
+    """Like `evaluate_ranking` but from streaming top-k output — no (I, J)
+    score matrix involved."""
+    out = {}
+    for k in ks:
+        p, r = precision_recall_from_topk(rec, test_mask, k)
+        out[f"P@{k}"] = p
+        out[f"R@{k}"] = r
+    return out
 
 
 def evaluate_ranking(scores, train_mask, test_mask, ks=(5, 10)) -> dict[str, float]:

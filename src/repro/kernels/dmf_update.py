@@ -56,3 +56,66 @@ def dmf_grads_kernel_call(u, p, q, r, conf, *, alpha, beta, gamma,
         interpret=interpret,
     )(u, p, q, r2, c2)
     return gu, gp, gq
+
+
+def _dmf_fused_step_kernel(u_ref, p_ref, q_ref, r_ref, c_ref,
+                           du_ref, gp_ref, dq_ref, loss_ref,
+                           *, theta, alpha, beta, gamma):
+    """Fused training step body: residual → Eqs. 9-11 grads → lr-scaled
+    deltas for the sender's own state, plus the raw global-factor gradient
+    gp (the *message* — receivers scale it by their own walk weight) and
+    the batch loss, all in one VMEM pass. The loss block is revisited by
+    every grid step and accumulated in place (grid is sequential on TPU)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    u = u_ref[...]
+    p = p_ref[...]
+    q = q_ref[...]
+    r = r_ref[...]          # (Bt, 1)
+    c = c_ref[...]          # (Bt, 1)
+    v = p + q
+    raw = r - jnp.sum(u * v, axis=-1, keepdims=True)    # (Bt, 1)
+    err = c * raw
+    gu = -err * v + alpha * u
+    gp = -err * u + beta * p
+    gq = -err * u + gamma * q
+    du_ref[...] = -theta * gu
+    gp_ref[...] = gp
+    dq_ref[...] = -theta * gq
+    loss_ref[...] += 0.5 * jnp.sum(c * raw * raw)
+
+
+def dmf_fused_step_kernel_call(u, p, q, r, conf, *, theta, alpha, beta, gamma,
+                               block_b: int = 256, interpret: bool = True):
+    """u/p/q: (B, K) f32 (K lane-aligned by the wrapper); r/conf: (B,).
+    Returns (du, gp, dq, loss): the -θ·grad deltas for u and q, the raw
+    propagation gradient for p, and the summed batch loss (1, 1)."""
+    B, K = u.shape
+    assert B % block_b == 0, (B, block_b)
+    r2 = r.reshape(B, 1)
+    c2 = conf.reshape(B, 1)
+    grid = (B // block_b,)
+    bspec_mat = pl.BlockSpec((block_b, K), lambda i: (i, 0))
+    bspec_col = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    bspec_loss = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kern = functools.partial(
+        _dmf_fused_step_kernel, theta=theta, alpha=alpha, beta=beta, gamma=gamma
+    )
+    du, gp, dq, loss = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[bspec_mat, bspec_mat, bspec_mat, bspec_col, bspec_col],
+        out_specs=[bspec_mat, bspec_mat, bspec_mat, bspec_loss],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), u.dtype),
+            jax.ShapeDtypeStruct((B, K), u.dtype),
+            jax.ShapeDtypeStruct((B, K), u.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, p, q, r2, c2)
+    return du, gp, dq, loss

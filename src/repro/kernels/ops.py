@@ -48,6 +48,30 @@ def dmf_grads(u, p, q, r, conf, *, alpha: float, beta: float, gamma: float,
     return gu[:B, :K], gp[:B, :K], gq[:B, :K]
 
 
+@functools.partial(jax.jit, static_argnames=("theta", "alpha", "beta", "gamma",
+                                             "interpret"))
+def dmf_fused_step(u, p, q, r, conf, *, theta: float, alpha: float, beta: float,
+                   gamma: float, interpret: bool = True):
+    """Fused Alg. 1 step: Eqs. 9-11 grads, lr-scaled u/q deltas, raw p
+    message, batch loss — one kernel pass. u/p/q: (B, K); r/conf: (B,).
+    Returns (du, gp, dq, loss_scalar)."""
+    B, K = u.shape
+    block_b = 256 if B % 256 == 0 else (B if B <= 256 else None)
+    if block_b is None:
+        # pad batch to a multiple of 256; padded rows carry conf=0 and zero
+        # factors, so grads, deltas and loss contributions are all exactly 0
+        u, p, q = (_pad_to(x, 256, 0) for x in (u, p, q))
+        r = _pad_to(r, 256, 0)
+        conf = _pad_to(conf, 256, 0)
+        block_b = 256
+    uP, pP, qP = (_pad_to(x, LANE, 1) for x in (u, p, q))
+    du, gp, dq, loss = dmf_update.dmf_fused_step_kernel_call(
+        uP, pP, qP, r, conf, theta=theta, alpha=alpha, beta=beta, gamma=gamma,
+        block_b=block_b, interpret=interpret,
+    )
+    return du[:B, :K], gp[:B, :K], dq[:B, :K], loss[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gossip_mix_op(M, X, *, interpret: bool = True):
     """Y = M @ X with MXU tiling. M: (I, I); X: (I, F)."""
@@ -72,5 +96,31 @@ def recommend_topk(U, V, train_mask, k: int, *, interpret: bool = True):
         mp = mp.at[:, J:].set(1)
     vals, idx = topk_scores.topk_scores_kernel_call(
         Up, Vp, mp, k, interpret=interpret,
+    )
+    return vals[:I], idx[:I]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def recommend_topk_peruser(U, V, train_mask, k: int, *, interpret: bool = True):
+    """DMF serving eval: per-user item factors V (I, J, K) — each learner
+    scores only his own copy v^i = p^i + q^i. Streams item tiles through a
+    running top-k; the (I, J) score matrix never materializes.
+
+    V is transposed to (I, K, J) so the lane dim is J (tiled by 128) and K
+    sits on sublanes (padded to the f32 sublane quantum, 8), avoiding a
+    16x lane-padding blowup of K."""
+    I, K = U.shape
+    J = V.shape[1]
+    BI, BJ = 128, 128
+    Up = _pad_to(_pad_to(U.astype(jnp.float32), BI, 0), 8, 1)
+    Vt = jnp.transpose(V.astype(jnp.float32), (0, 2, 1))   # (I, K, J)
+    Vt = _pad_to(_pad_to(_pad_to(Vt, BI, 0), 8, 1), BJ, 2)
+    # padded users: mask=0 rows score garbage but are sliced off; padded
+    # item columns must be masked out so they never enter anyone's top-k
+    mp = _pad_to(_pad_to(train_mask.astype(jnp.int8), BJ, 1), BI, 0)
+    if mp.shape[1] > J:
+        mp = mp.at[:, J:].set(1)
+    vals, idx = topk_scores.topk_scores_peruser_kernel_call(
+        Up, Vt, mp, k, block_i=BI, block_j=BJ, interpret=interpret,
     )
     return vals[:I], idx[:I]

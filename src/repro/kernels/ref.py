@@ -18,6 +18,22 @@ def dmf_grads_ref(u, p, q, r, conf, alpha, beta, gamma):
     return gu, gp, gq
 
 
+def dmf_fused_step_ref(u, p, q, r, conf, theta, alpha, beta, gamma):
+    """Fused Alg. 1 step oracle: (du, gp, dq, loss) = lr-scaled deltas for
+    the sender's u/q, raw global-factor gradient message, batch loss."""
+    gu, gp, gq = dmf_grads_ref(u, p, q, r, conf, alpha, beta, gamma)
+    raw = r - jnp.sum(u * (p + q), axis=-1)
+    loss = 0.5 * jnp.sum(conf * raw * raw)
+    return -theta * gu, gp, -theta * gq, loss
+
+
+def topk_scores_peruser_ref(U, V, train_mask, k):
+    """Per-user-factor serving oracle. U: (I, K), V: (I, J, K)."""
+    scores = jnp.einsum("ik,ijk->ij", U, V)
+    scores = jnp.where(train_mask, -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)
+
+
 def gossip_mix_ref(M, X):
     """Propagation mixing: (I, I) walk matrix times flattened learner state
     (I, F) — Alg. 1 line 15 vectorized over receivers."""

@@ -20,22 +20,11 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _topk_kernel(u_ref, v_ref, mask_ref, vals_ref, idx_ref, *, k, block_j):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _():
-        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
-        idx_ref[...] = jnp.full_like(idx_ref, -1)
-
-    scores = jnp.dot(u_ref[...], v_ref[...].T, preferred_element_type=jnp.float32)
-    scores = jnp.where(mask_ref[...] != 0, NEG_INF, scores)   # (bi, bj)
+def _merge_tile_topk(scores, col, vals, idxs, k):
+    """Merge a (bi, bj) tile of candidate scores/indices into the running
+    (bi, k) top-k buffers (descending order), via k rounds of extract-max.
+    Shared by the shared-V and per-user-V kernels."""
     bi, bj = scores.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1) + j * block_j
-
-    # merge tile into the running top-k: k rounds of extract-max
-    vals = vals_ref[...]
-    idxs = idx_ref[...]
     for slot in range(k):
         cur_max = jnp.max(scores, axis=-1, keepdims=True)          # (bi,1)
         cur_arg = jnp.argmax(scores, axis=-1)                      # (bi,)
@@ -56,6 +45,45 @@ def _topk_kernel(u_ref, v_ref, mask_ref, vals_ref, idx_ref, *, k, block_j):
         consumed = jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1) == cur_arg[:, None]
         scores = jnp.where(consumed, displaced_val[:, None], scores)
         col = jnp.where(consumed, displaced_idx[:, None], col)
+    return vals, idxs
+
+
+def _topk_kernel(u_ref, v_ref, mask_ref, vals_ref, idx_ref, *, k, block_j):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    scores = jnp.dot(u_ref[...], v_ref[...].T, preferred_element_type=jnp.float32)
+    scores = jnp.where(mask_ref[...] != 0, NEG_INF, scores)   # (bi, bj)
+    bi, bj = scores.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1) + j * block_j
+    vals, idxs = _merge_tile_topk(scores, col, vals_ref[...], idx_ref[...], k)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def _topk_peruser_kernel(u_ref, v_ref, mask_ref, vals_ref, idx_ref, *, k, block_j):
+    """DMF serving variant: every user has his *own* item factors (v^i =
+    p^i + q^i), so V is laid out (I, K, J) and score is a per-user
+    contraction over K (VPU reduce over the sublane dim), not one shared
+    matmul. The (I, J) score matrix still never leaves VMEM."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    u = u_ref[...]                                            # (bi, K)
+    v = v_ref[...]                                            # (bi, K, bj)
+    scores = jnp.sum(u[:, :, None] * v, axis=1)               # (bi, bj)
+    scores = jnp.where(mask_ref[...] != 0, NEG_INF, scores)
+    bi, bj = scores.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1) + j * block_j
+    vals, idxs = _merge_tile_topk(scores, col, vals_ref[...], idx_ref[...], k)
     vals_ref[...] = vals
     idx_ref[...] = idxs
 
@@ -87,4 +115,36 @@ def topk_scores_kernel_call(U, V, train_mask, k: int, *, block_i: int = 128,
         ],
         interpret=interpret,
     )(U, V, train_mask.astype(jnp.int8))
+    return vals, idx
+
+
+def topk_scores_peruser_kernel_call(U, Vt, train_mask, k: int, *,
+                                    block_i: int = 128, block_j: int = 128,
+                                    interpret: bool = True):
+    """U: (I, K), Vt: (I, K, J) per-user item factors (K-major so the lane
+    dim is J), train_mask: (I, J). Returns (vals (I, k), idx (I, k))."""
+    I, K = U.shape
+    J = Vt.shape[2]
+    assert Vt.shape[:2] == (I, K), (Vt.shape, U.shape)
+    assert I % block_i == 0 and J % block_j == 0, (I, J, block_i, block_j)
+    grid = (I // block_i, J // block_j)
+    kern = functools.partial(_topk_peruser_kernel, k=k, block_j=block_j)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_i, K, block_j), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((block_i, block_j), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_i, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_i, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((I, k), jnp.float32),
+            jax.ShapeDtypeStruct((I, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(U, Vt, train_mask.astype(jnp.int8))
     return vals, idx

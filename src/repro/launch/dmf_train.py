@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--walk-length", type=int, default=3)
     ap.add_argument("--paper-literal", action="store_true",
                     help="keep Alg.1's literal |N^d(i)| neighbor weighting")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="fused Pallas step kernel inside the scan epoch")
+    ap.add_argument("--dense-reference", action="store_true",
+                    help="seed dense per-batch path (equivalence oracle)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -39,22 +43,30 @@ def main():
         paper_literal=args.paper_literal,
     )
     W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
-    M = graph.walk_propagation_matrix(W, gcfg)
+    if args.dense_reference:
+        prop = graph.walk_propagation_matrix(W, gcfg)
+    else:
+        prop = graph.walk_neighbor_table(W, gcfg)
     cfg = dmf.DMFConfig(
         n_users=ds.n_users, n_items=ds.n_items, dim=args.dim, mode=args.mode,
         alpha=args.alpha, beta=args.beta, gamma=args.gamma, lr=args.lr,
         neg_samples=args.neg_samples, seed=args.seed,
+        use_pallas=args.use_pallas,
     )
     comm = graph.communication_bytes(
         W, D=args.walk_length, K=args.dim, n_ratings=len(ds.train))
+    fanout = ("dense" if args.dense_reference
+              else f"S={int(prop.idx.shape[1])}")
     print(f"dataset={args.dataset} users={ds.n_users} items={ds.n_items} "
-          f"train={len(ds.train)} comm/epoch={comm/1e6:.2f} MB")
+          f"train={len(ds.train)} comm/epoch={comm/1e6:.2f} MB "
+          f"propagation={fanout}")
 
     def cb(t, state, loss):
         if t % 10 == 0:
             print(f"epoch {t:4d} train_loss {loss:.5f}")
 
-    res = dmf.fit(cfg, ds.train, M, epochs=args.epochs, test=ds.test, callback=cb)
+    res = dmf.fit(cfg, ds.train, prop, epochs=args.epochs, test=ds.test,
+                  callback=cb, dense_reference=args.dense_reference)
     ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
     print(json.dumps({k: round(v, 4) for k, v in ev.items()}))
 

@@ -1,5 +1,8 @@
 """Synthetic POI generator + LM pipeline invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import lm_pipeline, synthetic_poi

@@ -1,6 +1,7 @@
 """User adjacency graph + random-walk propagation (paper Eqs. 2-4)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph

@@ -1,5 +1,8 @@
 """P@k / R@k — hand example + hypothesis invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics

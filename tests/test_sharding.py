@@ -12,11 +12,14 @@ from tests.conftest import run_in_subprocess_with_devices
 def test_rules_divisibility_fallback():
     """56 heads on a 4-wide model axis -> replicated, not an error."""
     from jax.sharding import PartitionSpec as P
-    code_free_mesh = None
     # use a host mesh in-process is not allowed (single device) -> build an
-    # abstract mesh for spec resolution only
+    # abstract mesh for spec resolution only. AbstractMesh wants
+    # ((name, size), ...) pairs; newer jax also accepts (sizes, names).
     from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((2, 16), ("data", "model"))
+    try:
+        mesh = AbstractMesh((("data", 2), ("model", 16)))
+    except TypeError:
+        mesh = AbstractMesh((2, 16), ("data", "model"))
     from repro.sharding import rules
     # yi-34b: 56 heads on a 16-wide model axis -> replicate (56 % 16 != 0)
     spec = rules.resolve_spec(("embed", "heads", None), (64, 56, 16), mesh)
