@@ -6,12 +6,19 @@ import pathlib
 import time
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+ROOT = RESULTS.parent.parent
 
 
 def save_json(name: str, obj) -> pathlib.Path:
+    """Write benchmarks/results/<name>.json. Headline artifacts (BENCH_*
+    names, e.g. BENCH_dmf_train, BENCH_serving) are mirrored to the repo
+    root — the convention the perf trajectory is tracked by."""
     RESULTS.mkdir(parents=True, exist_ok=True)
+    payload = json.dumps(obj, indent=1, default=float)
     p = RESULTS / f"{name}.json"
-    p.write_text(json.dumps(obj, indent=1, default=float))
+    p.write_text(payload)
+    if name.startswith("BENCH_"):
+        (ROOT / f"{name}.json").write_text(payload)
     return p
 
 

@@ -12,7 +12,6 @@ benchmarks/results/ and the repo root.
 from __future__ import annotations
 
 import json
-import pathlib
 import time
 
 import jax
@@ -22,8 +21,6 @@ import numpy as np
 from benchmarks import common
 from repro.core import dmf, graph
 from repro.data import synthetic_poi
-
-ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _time_epochs(epoch_fn, state, n_timed: int, cfg, train, prop):
@@ -91,8 +88,7 @@ def main(full: bool = False, n_timed: int = 3, n_check: int = 4) -> dict:
         "train_losses_dense": rd.train_losses,
         "train_losses_sparse": rs.train_losses,
     }
-    common.save_json("BENCH_dmf_train", res)
-    (ROOT / "BENCH_dmf_train.json").write_text(json.dumps(res, indent=1))
+    common.save_json("BENCH_dmf_train", res)   # mirrors to repo root
     return res
 
 

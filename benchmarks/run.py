@@ -101,6 +101,24 @@ def main() -> None:
             f"loss_dev={res['train_loss_max_diff_sparse']:.2e}"
         )
 
+    if want("serving"):
+        from benchmarks import serving_bench
+        _section("serving (engine: loop vs batched vs geo-pruned)")
+        t0 = time.perf_counter()
+        res = serving_bench.main(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        r = res["requests_per_sec"]
+        print(
+            f"serving,{us:.0f},"
+            f"loop={r['loop_per_request']:.1f}rps;"
+            f"dense={r['batched_dense']:.1f}rps;"
+            f"pruned={r['batched_pruned']:.1f}rps;"
+            f"speedup_vs_loop={res['speedup_pruned_vs_loop']:.1f}x;"
+            f"agree_in_bucket="
+            f"{res['pruned_dense_topk_agreement_where_in_bucket']:.3f};"
+            f"agree_raw={res['pruned_dense_topk_agreement']:.3f}"
+        )
+
     if want("complexity"):
         from benchmarks import complexity
         _section("complexity (paper §Complexity)")

@@ -1,0 +1,134 @@
+"""Serving-path benchmark: sustained throughput + latency percentiles for
+the three request paths over one trained model —
+
+  * ``loop_per_request`` — the seed behavior: one interpret-mode kernel
+    dispatch per request (`ops.recommend_topk` with a single-user batch);
+  * ``batched_dense``    — `ServingEngine(prune=False)`: microbatched,
+    full-J streaming top-k per request;
+  * ``batched_pruned``   — `ServingEngine(prune=True)`: microbatched +
+    city-bucket candidate pruning through the fused serve kernel.
+
+Writes ``BENCH_serving.json`` (repo root + benchmarks/results/, same
+convention as BENCH_dmf_train). Required: batched_pruned ≥ 10x the
+per-request loop in requests/sec at foursquare_like(reduced=True) scale.
+Also reports how often the pruned top-k agrees with the dense full-J
+top-k (Fig. 2 says almost always) and the per-microbatch latency
+percentiles of both engine paths.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.kernels import ops
+from repro.serving import ServingConfig, ServingEngine, index_from_dataset
+
+
+def _loop_per_request(state, seen, users, k, n_timed):
+    """Seed path: per-request Python loop, one kernel call per request."""
+    U = state.U
+    V = state.P + state.Q
+    seen = jnp.asarray(seen)
+    u0 = int(users[0])
+    ops.recommend_topk(U[u0][None], V[u0], seen[u0][None], k)  # warm/compile
+    t0 = time.perf_counter()
+    for u in users[:n_timed]:
+        u = int(u)
+        _, idx = ops.recommend_topk(U[u][None], V[u], seen[u][None], k)
+        jax.block_until_ready(idx)
+    dt = time.perf_counter() - t0
+    return n_timed / dt
+
+
+def _engine_path(state, index, train, users, k, microbatch, prune, interpret=True):
+    eng = ServingEngine(
+        state, index,
+        ServingConfig(microbatch=microbatch, k=k, prune=prune,
+                      interpret=interpret),
+        train=train,
+    )
+    eng.recommend(users[:microbatch])      # warm/compile
+    eng.stats.reset()
+    _, idx = eng.recommend(users)
+    return eng.requests_per_sec, eng.stats.latency_percentiles(), idx
+
+
+def main(full: bool = False) -> dict:
+    ds = synthetic_poi.foursquare_like(reduced=not full)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=20 if not full else 40)
+    index = index_from_dataset(ds)
+
+    from repro.core import metrics as metrics_lib
+    seen = metrics_lib.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+
+    k = 10
+    microbatch = 64
+    n_requests = 256 if not full else 1024
+    n_loop = 32 if not full else 64        # the loop path is slow by design
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, ds.n_users, n_requests)
+
+    rps_loop = _loop_per_request(res.state, seen, users, k, n_loop)
+    rps_dense, lat_dense, idx_dense = _engine_path(
+        res.state, index, ds.train, users, k, microbatch, prune=False)
+    rps_pruned, lat_pruned, idx_pruned = _engine_path(
+        res.state, index, ds.train, users, k, microbatch, prune=True)
+
+    # pruning fidelity. Two regimes: where the dense full-J top-k already
+    # lies inside the user's city bucket, pruning must be EXACT (asserted
+    # in tests/test_serving.py). Elsewhere the difference is score-tie
+    # spillover: untouched items score exactly u·0 = 0, so users short of k
+    # positively-scored city candidates fill dense slots with lowest-id
+    # 0.0-ties from any city — the pruned path keeps those in-city instead.
+    agree = np.fromiter(
+        ((set(a[a >= 0]) == set(b[b >= 0]))
+         for a, b in zip(idx_pruned, idx_dense)), bool, len(users))
+    in_bucket = np.fromiter(
+        (bool(np.isin(d[d >= 0],
+                      index.bucket_items[index.user_bucket[u]]).all())
+         for u, d in zip(users, idx_dense)), bool, len(users))
+
+    res_json = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items, "dim": cfg.dim,
+            "k": k, "microbatch": microbatch, "n_requests": int(n_requests),
+            "n_loop_requests": int(n_loop),
+            "bucket_cap": index.cap, "n_buckets": index.n_buckets,
+            "n_truncated_buckets": index.n_truncated_buckets,
+        },
+        "requests_per_sec": {
+            "loop_per_request": rps_loop,
+            "batched_dense": rps_dense,
+            "batched_pruned": rps_pruned,
+        },
+        "latency_ms": {
+            "batched_dense": lat_dense,
+            "batched_pruned": lat_pruned,
+        },
+        "speedup_pruned_vs_loop": rps_pruned / rps_loop,
+        "speedup_pruned_vs_dense": rps_pruned / rps_dense,
+        "pruned_dense_topk_agreement": float(agree.mean()),
+        "dense_topk_in_bucket_frac": float(in_bucket.mean()),
+        "pruned_dense_topk_agreement_where_in_bucket": float(
+            agree[in_bucket].mean() if in_bucket.any() else 1.0),
+    }
+    common.save_json("BENCH_serving", res_json)   # mirrors to repo root
+    return res_json
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

@@ -1,78 +1,92 @@
-"""Serving example: batched POI recommendation requests against a trained
-DMF model, scored by the Pallas top-k kernel (kernels/topk_scores.py).
+"""Serving example: the decentralized POI serving engine end-to-end.
 
-Each "request" is a user id; the server gathers that learner's own factors
-(u_i, p^i + q^i) — in production these live on-device; here the simulation
-holds them in one process — and returns k unseen POIs.
+Train DMF (Alg. 1), build the city-bucketed candidate index (paper Fig. 2:
+check-ins concentrate in the home city), then drive a request stream
+through the batched `ServingEngine` — each request scores only its
+home-city bucket with the learner's own factors (u_i, p^i + q^i) via the
+fused gather→score→top-k Pallas kernel, one compiled dispatch per
+microbatch. Finally stream a few held-out check-ins through the online
+refresh and watch the served factors track them without retraining.
 
-    PYTHONPATH=src python examples/poi_serving.py --requests 64 --k 10
+    PYTHONPATH=src python examples/poi_serving.py --requests 256 --k 10
 """
 import argparse
-import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dmf, graph, metrics
 from repro.data import synthetic_poi
-from repro.kernels import ops
+from repro.kernels import ref
+from repro.serving import (OnlineConfig, ServingConfig, ServingEngine,
+                           index_from_dataset)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--microbatch", type=int, default=64)
     args = ap.parse_args()
 
     ds = synthetic_poi.foursquare_like(reduced=True)
     gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
     W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
-    M = graph.walk_propagation_matrix(W, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
     cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
                         beta=0.1, gamma=0.01)
     print("training DMF ...")
-    res = dmf.fit(cfg, ds.train, M, epochs=args.epochs)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=args.epochs)
 
-    train_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    index = index_from_dataset(ds)
+    print(f"candidate index: {index.n_buckets} city buckets, cap={index.cap} "
+          f"(J={ds.n_items}), {index.n_truncated_buckets} truncated")
+
+    engine = ServingEngine(
+        res.state, index,
+        ServingConfig(microbatch=args.microbatch, k=args.k),
+        train=ds.train, nbr=nbr, dmf_cfg=cfg,
+    )
     rng = np.random.default_rng(0)
-    batch_users = rng.integers(0, ds.n_users, args.requests)
+    users = rng.integers(0, ds.n_users, args.requests)
+    engine.recommend(users[: args.microbatch])        # warm/compile
+    engine.stats.reset()
 
-    # batched request: each user scores with their OWN item factors
-    U_batch = res.state.U[batch_users]                                 # (R, K)
-    V_batch = res.state.P[batch_users] + res.state.Q[batch_users]      # (R, J, K)
-    mask = jnp.asarray(train_mask[batch_users])
+    vals, recs = engine.recommend(users)
+    lat = engine.stats.latency_percentiles()
+    print(f"{args.requests} requests in {engine.stats.n_dispatches} "
+          f"microbatch dispatches: {engine.requests_per_sec:.0f} req/s, "
+          f"p50={lat['p50_ms']:.1f} ms/batch")
 
-    t0 = time.perf_counter()
-    hits = 0
     test_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.test)
-    recs = []
-    vals_loop = []
-    for r in range(args.requests):  # per-learner serving (decentralized!)
-        vals, idx = ops.recommend_topk(
-            U_batch[r][None], V_batch[r], mask[r][None], args.k
-        )
-        recs.append(np.asarray(idx)[0])
-        vals_loop.append(np.asarray(vals)[0])
-        hits += test_mask[batch_users[r], np.asarray(idx)[0]].sum()
-    dt = time.perf_counter() - t0
-    print(f"{args.requests} requests in {dt*1e3:.1f} ms "
-          f"({dt/args.requests*1e3:.2f} ms/req, interpret-mode kernel)")
-    print(f"P@{args.k} over requests: "
-          f"{hits / (args.requests * args.k):.4f}")
-    print("sample recommendation for user", int(batch_users[0]), ":", recs[0][:5])
+    filled = recs >= 0
+    hits = (np.take_along_axis(test_mask[users], np.maximum(recs, 0), 1)
+            & filled).sum()
+    print(f"P@{args.k} over requests: {hits / recs.size:.4f}")
+    print("sample recommendation for user", int(users[0]), ":", recs[0][:5])
 
-    # same requests, one batched kernel call: per-user factors streamed
-    # through the running top-k (the (R, J) score matrix never materializes)
-    ops.recommend_topk_peruser(U_batch, V_batch, mask, args.k)  # warm/compile
-    t0 = time.perf_counter()
-    vals_b, idx_b = ops.recommend_topk_peruser(U_batch, V_batch, mask, args.k)
-    dt_b = time.perf_counter() - t0
-    # indices can differ at score ties / last-ulp; the score lists must match
-    np.testing.assert_allclose(np.asarray(vals_b), np.stack(vals_loop),
-                               rtol=1e-5, atol=1e-6)
-    print(f"batched: {args.requests} requests in one call, {dt_b*1e3:.1f} ms "
-          f"({dt_b/args.requests*1e3:.2f} ms/req)")
+    # engine == dense-oracle spot check (kernel streaming vs lax.top_k)
+    import jax.numpy as jnp
+    sub = users[:16]
+    v_ref, i_ref = ref.serve_topk_ref(
+        jnp.asarray(res.state.U[sub]),
+        jnp.asarray((res.state.P + res.state.Q)[sub]),
+        jnp.asarray(index.bucket_items[index.user_bucket[sub]]),
+        jnp.asarray(np.asarray(engine.seen)[sub]), args.k)
+    assert (recs[:16] == np.asarray(i_ref)).all(), "engine != dense oracle"
+    assert (vals[:16] == np.asarray(v_ref)).all(), "engine values != oracle"
+    print("engine == dense oracle (indices and values): OK")
+
+    # online refresh: stream held-out check-ins, served loss tracks them
+    events = ds.test[: min(64, len(ds.test))]
+    before = dmf.test_loss(engine.state, events)
+    report = engine.ingest(events, OnlineConfig(steps=3))
+    after = dmf.test_loss(engine.state, events)
+    print(f"online refresh: {report.n_events} check-ins, "
+          f"{len(report.affected_users)} users affected, "
+          f"{len(report.touched_users)} factor rows touched; "
+          f"loss on streamed events {before:.4f} -> {after:.4f}")
+    assert after < before, "online refresh failed to track streamed events"
 
 
 if __name__ == "__main__":

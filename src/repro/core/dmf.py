@@ -151,13 +151,20 @@ def _batch_step(
     return U, P, Q, loss
 
 
-def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig):
+def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
+                         valid=None):
     """One minibatch of Alg. 1 against the sparse neighbor table.
 
     Identical math to `_batch_step`; only the line 13-15 propagation differs:
     instead of weighting gp by a full (I,) column of M, each sender's (S,)
     receiver row is gathered and scatter-added — padded self-index slots
     carry weight 0 and are exact no-ops.
+
+    ``valid`` (optional (B,) bool/float) marks real rows in a padded batch
+    (the online-refresh path pads event streams to a fixed dispatch shape).
+    Invalid rows contribute exactly nothing: conf=0 already zeroes their
+    error term, but the α/β/γ regularizer pulls survive in the gradients,
+    so all three deltas are masked before the scatters.
     """
     theta = cfg.lr
     if cfg.use_pallas:
@@ -171,6 +178,11 @@ def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFCon
         gu, gp, gq, loss = _grads_and_loss(U[ui], P[ui, vj], Q[ui, vj], r, conf, cfg)
         du = -theta * gu
         dq = -theta * gq
+    if valid is not None:
+        keep = valid.astype(du.dtype)[:, None]
+        du = du * keep
+        dq = dq * keep
+        gp = gp * keep
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
@@ -213,16 +225,17 @@ def _epoch_scan(
     return U, P, Q, losses
 
 
-def sample_epoch(
-    train: np.ndarray, cfg: DMFConfig, rng: np.random.Generator
+def sample_with_negatives(
+    pos: np.ndarray, n_items: int, m: int, rng: np.random.Generator
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Shuffled positives + m sampled unobserved negatives with confidence 1/m."""
-    n = len(train)
-    perm = rng.permutation(n)
-    pos = train[perm]
-    m = cfg.neg_samples
+    """Positives + m sampled unobserved negatives per positive with
+    confidence 1/m (paper §Unobserved rating sample), shuffled together.
+    The single definition of the sampling convention — shared by training
+    epochs and the online-refresh event stream (serving/online.py), so the
+    two objectives cannot silently diverge."""
+    n = len(pos)
     neg_u = np.repeat(pos[:, 0], m)
-    neg_j = rng.integers(0, cfg.n_items, size=n * m)
+    neg_j = rng.integers(0, n_items, size=n * m)
     ui = np.concatenate([pos[:, 0], neg_u])
     vj = np.concatenate([pos[:, 1], neg_j])
     r = np.concatenate([np.ones(n, np.float32), np.zeros(n * m, np.float32)])
@@ -231,6 +244,14 @@ def sample_epoch(
     )
     order = rng.permutation(len(ui))
     return ui[order], vj[order], r[order], conf[order]
+
+
+def sample_epoch(
+    train: np.ndarray, cfg: DMFConfig, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Shuffled positives + m sampled unobserved negatives with confidence 1/m."""
+    pos = train[rng.permutation(len(train))]
+    return sample_with_negatives(pos, cfg.n_items, cfg.neg_samples, rng)
 
 
 def train_epoch_dense(

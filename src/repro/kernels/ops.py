@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dmf_update, gossip_mix, topk_scores
+from repro.kernels import serve_topk as serve_topk_lib
 
 LANE = 128
 
@@ -98,6 +99,38 @@ def recommend_topk(U, V, train_mask, k: int, *, interpret: bool = True):
         Up, Vp, mp, k, interpret=interpret,
     )
     return vals[:I], idx[:I]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def serve_topk(U, V, cand, seen, k: int, *, interpret: bool = True):
+    """Geo-pruned batched serving: per-request candidate gather + scores +
+    running top-k fused (kernels/serve_topk.py). U: (R, K); V: (R, J, K)
+    per-request item factors; cand: (R, Cw) int32 candidate item ids, -1
+    padded; seen: (R, J) bool/int8 seen-filter. Returns (vals, idx) (R, k),
+    idx = global item ids, -1 in unfilled slots.
+
+    *Compute* per request is O(Cw·K), not O(J·K) — the grid tiles the
+    candidate dim. Memory staging on this interpret-mode container is still
+    O(J·K) per request (the user's full item slab is handed to the kernel
+    as the gather source); the compiled-TPU design keeps V in HBM and DMAs
+    only the candidate rows, making the traffic O(Cw·K) too. Padding: R to
+    the request block, K to the f32 sublane quantum, J to the lane (never
+    gathered: cand ids < J), Cw to the candidate block with -1 (masked
+    inside the kernel)."""
+    R, K = U.shape
+    J = V.shape[1]
+    BI, BJ = 8, 128
+    Up = _pad_to(_pad_to(U.astype(jnp.float32), BI, 0), 8, 1)
+    Vt = jnp.transpose(V.astype(jnp.float32), (0, 2, 1))   # (R, K, J)
+    Vt = _pad_to(_pad_to(_pad_to(Vt, BI, 0), 8, 1), LANE, 2)
+    sp = _pad_to(_pad_to(seen.astype(jnp.int8), LANE, 1), BI, 0)
+    cp = jnp.pad(cand.astype(jnp.int32),
+                 [(0, (-R) % BI), (0, (-cand.shape[1]) % BJ)],
+                 constant_values=-1)
+    vals, idx = serve_topk_lib.serve_topk_kernel_call(
+        Up, Vt, sp, cp, k, block_i=BI, block_j=BJ, interpret=interpret,
+    )
+    return vals[:R], idx[:R]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))

@@ -34,6 +34,40 @@ def topk_scores_peruser_ref(U, V, train_mask, k):
     return jax.lax.top_k(scores, k)
 
 
+# single source of the dead-slot sentinel: the oracle must use the exact
+# value the kernels fill unmerged slots with, or bitwise-equality breaks
+from repro.kernels.topk_scores import NEG_INF  # noqa: E402
+
+
+def masked_topk_finalize(vals, idx):
+    """Normalize a dense `lax.top_k` result to the streaming-kernel contract:
+    slots whose score is masked-out (≤ NEG_INF, incl. -inf) become
+    (NEG_INF, -1) — `top_k` otherwise reports arbitrary indices there."""
+    dead = vals <= NEG_INF
+    return jnp.where(dead, NEG_INF, vals), jnp.where(dead, -1, idx)
+
+
+def serve_topk_ref(U, V, cand, seen, k):
+    """Geo-pruned serving oracle: dense per-request scores, masked to the
+    candidate bucket and the seen-filter, then `lax.top_k`.
+
+    U: (R, K); V: (R, J, K); cand: (R, Cw) int32 item ids (-1 pad);
+    seen: (R, J) bool/int8. Returns (vals (R, k), idx (R, k)) with -1/NEG_INF
+    in unfilled slots — the exact-equality target for `ops.serve_topk`.
+    """
+    R, J, _ = V.shape
+    # K-major contraction (not einsum): reduction grouping over K is then
+    # invariant to sublane padding, so the Pallas kernel matches *bitwise*
+    # (einsum picks a different association, off by ~1 ulp).
+    scores = jnp.sum(U[:, :, None] * jnp.transpose(V, (0, 2, 1)), axis=1)
+    elig = jnp.zeros((R, J), bool).at[
+        jnp.arange(R)[:, None], jnp.maximum(cand, 0)
+    ].max(cand >= 0)
+    scores = jnp.where(elig & (seen == 0), scores, NEG_INF)
+    vals, idx = jax.lax.top_k(scores, k)
+    return masked_topk_finalize(vals, idx)
+
+
 def gossip_mix_ref(M, X):
     """Propagation mixing: (I, I) walk matrix times flattened learner state
     (I, F) — Alg. 1 line 15 vectorized over receivers."""

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: geo-pruned batched serving — candidate gather +
+per-user scores + masked running top-k, fused.
+
+A microbatch of R requests arrives with each learner's own factors
+(u_i (K,), v^i = p^i + q^i (J, K) — the decentralized per-user item view)
+and a per-request candidate row from the city bucket index
+(`serving/candidates.py`, (R, Cw) global item ids, -1 padded). The kernel
+fuses, per (request, candidate) tile in one VMEM pass:
+
+    gather v^i at the candidate ids  →  scores u_i · v^i_cand
+    →  seen/pad masking  →  merge into the running per-request top-k.
+
+Only O(Cw·K) *compute* is done per request instead of O(J·K): the grid's
+inner axis tiles the *candidate* dim, not the item dim — that is the
+geo-pruning (paper Fig. 2: check-ins concentrate in the home city). The
+gather source (the request's item slab) is still staged whole on this
+container — see `ops.serve_topk` for the HBM/DMA shape of the compiled
+design.
+
+The candidate gather is a per-row `take_along_axis` over the request's own
+item slab held in VMEM; the output index buffer carries global item ids
+directly (no position→id remap pass afterwards). Unfilled slots (fewer
+unseen candidates than k, incl. all-seen users) stay at (NEG_INF, -1).
+
+Layout mirrors `topk_scores._topk_peruser_kernel`: V comes in as (R, K, J)
+so the lane dim is J and K sits on sublanes. On this CPU container the
+kernel runs interpret=True; on real TPU the per-request slab would be
+DMA'd from HBM per candidate window instead of staged whole — the compute
+and the top-k carry are identical.
+
+Tie contract (load-bearing for the exact-equality guarantee): candidate
+rows are in ascending item-id order and `_merge_tile_topk` only displaces
+on strictly-greater scores, so equal scores resolve to the lowest item id
+— the same tie-break as `jax.lax.top_k` on dense scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topk_scores import NEG_INF, _merge_tile_topk
+
+
+def _serve_topk_kernel(u_ref, v_ref, seen_ref, cand_ref, vals_ref, idx_ref, *, k):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    u = u_ref[...]                                            # (bi, K)
+    cand = cand_ref[...]                                      # (bi, bj) ids
+    safe = jnp.maximum(cand, 0)                               # pad-safe gather
+    v = v_ref[...]                                            # (bi, K, J)
+    vc = jnp.take_along_axis(v, safe[:, None, :], axis=2)     # (bi, K, bj)
+    scores = jnp.sum(u[:, :, None] * vc, axis=1)              # (bi, bj)
+    seen = jnp.take_along_axis(seen_ref[...], safe, axis=1)   # (bi, bj)
+    scores = jnp.where((cand < 0) | (seen != 0), NEG_INF, scores)
+    vals, idxs = _merge_tile_topk(scores, cand, vals_ref[...], idx_ref[...], k)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def serve_topk_kernel_call(U, Vt, seen, cand, k: int, *, block_i: int = 8,
+                           block_j: int = 128, interpret: bool = True):
+    """U: (R, K), Vt: (R, K, J) per-request item factors, seen: (R, J) int8,
+    cand: (R, Cw) int32 global item ids (-1 = padded slot). Returns
+    (vals (R, k), idx (R, k)) with idx holding global item ids, -1 where
+    fewer than k unseen candidates exist."""
+    R, K = U.shape
+    J = Vt.shape[2]
+    Cw = cand.shape[1]
+    assert Vt.shape[:2] == (R, K), (Vt.shape, U.shape)
+    assert seen.shape == (R, J), (seen.shape, R, J)
+    assert R % block_i == 0 and Cw % block_j == 0, (R, Cw, block_i, block_j)
+    assert k <= block_j, (k, block_j)
+    grid = (R // block_i, Cw // block_j)
+    kern = functools.partial(_serve_topk_kernel, k=k)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_i, K, J), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_i, J), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_i, block_j), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_i, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_i, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), jnp.float32),
+            jax.ShapeDtypeStruct((R, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(U, Vt, seen.astype(jnp.int8), cand)
+    return vals, idx

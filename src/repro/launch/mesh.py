@@ -9,6 +9,21 @@ from __future__ import annotations
 import jax
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """Version-compat `shard_map`: jax >= 0.5 exposes ``jax.shard_map`` (with
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (where the same knob is spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips single pod; (2,16,16) = 512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -1,0 +1,22 @@
+# Serving subsystem: decentralized POI recommendation over trained DMFState.
+#   candidates.py — city-bucketed candidate index (paper Fig. 2 pruning)
+#   engine.py     — microbatched ServingEngine (one jitted dispatch per batch)
+#   online.py     — Eq. 9-11 online factor refresh from streamed check-ins
+from repro.serving.candidates import (
+    CandidateIndex,
+    build_candidate_index,
+    index_from_dataset,
+)
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.online import OnlineConfig, RefreshReport, online_refresh
+
+__all__ = [
+    "CandidateIndex",
+    "build_candidate_index",
+    "index_from_dataset",
+    "ServingConfig",
+    "ServingEngine",
+    "OnlineConfig",
+    "RefreshReport",
+    "online_refresh",
+]

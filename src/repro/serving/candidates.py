@@ -1,0 +1,130 @@
+"""City-bucketed candidate index — the paper's Fig. 2 turned into a pruning
+structure.
+
+The paper observes ("location aggregation") that users check in almost
+exclusively inside their home city, and the synthetic data gate reproduces
+it (`cross_city_frac` ~ 3%). A production server exploits exactly this
+structure: a request from user i only needs to score the POIs of city(i),
+so per-request cost drops from O(J·K) to O(|city items|·K) — the move that
+makes millions-of-users traffic plausible when J is in the millions while a
+city holds thousands.
+
+The index is a fixed-shape table so every microbatch compiles to one
+dispatch shape:
+
+* ``bucket_items (C, cap) int32`` — each city's POI ids in **ascending id
+  order**, padded with -1 to a shared cap (a lane multiple). Ascending
+  order is contractual: the serving kernel scans candidate tiles left to
+  right and breaks score ties in favor of the earliest candidate, which
+  then matches `jax.lax.top_k`'s lowest-index tie-break exactly — zero-init
+  item factors make exact 0.0 score ties common, so this is load-bearing
+  for the engine == dense-oracle equality guarantee.
+* ``user_bucket (I,)`` — home-city bucket per user (the request router key).
+
+Capacity overflow (a city larger than ``cap``) keeps the ``cap`` items of
+highest priority (popularity when given, lowest ids otherwise) and records
+the truncation — those users lose exactness vs the dense oracle, which the
+engine reports rather than hides.
+
+The seen-filter (the user's train mask) is intentionally *not* baked in
+here: seen-ness is per-user mutable state (online check-ins arrive while
+serving), owned by the engine and applied inside the serve kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateIndex:
+    bucket_items: np.ndarray    # (C, cap) int32, -1 padded, ascending per row
+    bucket_size: np.ndarray     # (C,) int32 — items actually indexed (≤ cap)
+    city_size: np.ndarray       # (C,) int32 — true city sizes (pre-truncation)
+    user_bucket: np.ndarray     # (I,) int32 home bucket per user
+    n_items: int
+
+    @property
+    def cap(self) -> int:
+        return int(self.bucket_items.shape[1])
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.bucket_items.shape[0])
+
+    @property
+    def n_truncated_buckets(self) -> int:
+        return int((self.city_size > self.bucket_size).sum())
+
+    def user_fits(self) -> np.ndarray:
+        """(I,) bool — True where the user's full city fits the bucket, i.e.
+        the geo-pruned candidate set is lossless for that user."""
+        return (self.city_size == self.bucket_size)[self.user_bucket]
+
+    def eligible_mask(self, users: np.ndarray) -> np.ndarray:
+        """(len(users), J) bool — candidate-eligibility rows, the dense-oracle
+        counterpart of the bucket gather (tests / ref path)."""
+        users = np.asarray(users)
+        elig = np.zeros((len(users), self.n_items), dtype=bool)
+        for row, u in enumerate(users):
+            items = self.bucket_items[self.user_bucket[u]]
+            elig[row, items[items >= 0]] = True
+        return elig
+
+
+def build_candidate_index(
+    item_city: np.ndarray,
+    user_city: np.ndarray,
+    *,
+    n_items: int | None = None,
+    cap: int | None = None,
+    pad_to: int = LANE,
+    item_priority: np.ndarray | None = None,
+) -> CandidateIndex:
+    """Bucket POIs by city. ``cap`` bounds the per-bucket candidate count
+    (default: the largest city, rounded up to ``pad_to`` — lossless);
+    ``item_priority`` (higher = kept first, e.g. popularity counts) decides
+    what survives truncation when a city overflows ``cap``."""
+    item_city = np.asarray(item_city)
+    user_city = np.asarray(user_city)
+    J = int(n_items) if n_items is not None else int(len(item_city))
+    assert len(item_city) == J, (len(item_city), J)
+    C = int(item_city.max()) + 1 if len(item_city) else 1
+    assert user_city.min() >= 0 and int(user_city.max()) < C, "user city out of range"
+
+    buckets = [np.flatnonzero(item_city == c) for c in range(C)]
+    city_size = np.array([len(b) for b in buckets], dtype=np.int32)
+    max_city = int(city_size.max()) if C else 0
+    if cap is None:
+        cap = max_city
+    cap = max(int(-(-max(cap, 1) // pad_to)) * pad_to, pad_to)
+
+    bucket_items = np.full((C, cap), -1, dtype=np.int32)
+    bucket_size = np.zeros(C, dtype=np.int32)
+    for c, items in enumerate(buckets):
+        if len(items) > cap:
+            if item_priority is not None:
+                keep = items[np.argsort(-np.asarray(item_priority)[items],
+                                        kind="stable")[:cap]]
+            else:
+                keep = items[:cap]
+            items = np.sort(keep)   # ascending-id order is contractual
+        bucket_items[c, : len(items)] = items
+        bucket_size[c] = len(items)
+    return CandidateIndex(
+        bucket_items=bucket_items,
+        bucket_size=bucket_size,
+        city_size=city_size,
+        user_bucket=user_city.astype(np.int32),
+        n_items=J,
+    )
+
+
+def index_from_dataset(ds, **kw) -> CandidateIndex:
+    """Convenience: index straight from a `synthetic_poi.POIDataset`."""
+    return build_candidate_index(
+        ds.item_city, ds.user_city, n_items=ds.n_items, **kw
+    )

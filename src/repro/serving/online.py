@@ -1,0 +1,141 @@
+"""Online factor refresh: streamed check-ins update served factors in place.
+
+Following "Practical Privacy Preserving POI Recommendation" (Chen et al.)
+and "Decentralized Collaborative Learning Framework for Next POI
+Recommendation" (Long et al.), on-device inference comes with *incremental*
+refresh: when user i checks in at POI j, the learner applies the paper's
+Eqs. 9-11 local SGD step for (i, j) — plus a few sampled negatives, exactly
+the training-time objective — and ships only the global-factor gradient
+∂L/∂p^i_j to its ≤D-hop `walk_neighbor_table` receivers. Ratings never
+leave the user; the privacy contract is unchanged from training (the same
+`core/dmf._sparse_batch_update` executes the step).
+
+Locality guarantee (unit-tested): one refresh touches
+  * U rows:  only the users with new check-ins ("affected"),
+  * Q rows:  only affected users,
+  * P rows:  only the union of the affected users' neighbor-table receivers
+             (which includes the senders themselves),
+and nothing else — the served population keeps its factors bit-identical.
+
+Events are padded to a fixed dispatch shape (``OnlineConfig.batch_cap``)
+so every refresh reuses one compiled step; padded rows carry conf=0 and
+valid=0 and contribute exactly nothing (see `_sparse_batch_update`). The
+U/P/Q buffers are donated to the step — refresh is in-place at the XLA
+level, no copy of the (I, J, K) factors per event batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dmf
+from repro.core import graph as graph_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    batch_cap: int = 256    # fixed event-batch shape (events + negatives)
+    steps: int = 4          # local SGD passes over the event batch
+    neg_samples: int = 3    # m fresh unobserved negatives per check-in
+
+
+@dataclasses.dataclass
+class RefreshReport:
+    affected_users: np.ndarray   # unique users with new check-ins
+    touched_users: np.ndarray    # affected ∪ their neighbor-table receivers
+    losses: list[float]          # per-step batch loss on the event batch
+    n_events: int
+    n_batches: int
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+def _refresh_step(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, valid, cfg):
+    return dmf._sparse_batch_update(
+        U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg, valid=valid
+    )
+
+
+def _event_batches(events: np.ndarray, cfg: dmf.DMFConfig, ocfg: OnlineConfig,
+                   rng: np.random.Generator):
+    """Pack check-ins + per-event negatives into fixed-shape (cap,) batches.
+
+    Negatives are freshly sampled unobserved items with confidence 1/m via
+    the training-time `dmf.sample_with_negatives` (same objective by
+    construction) — without them a refresh would only push scores up and
+    drift the ranking calibration."""
+    ui, vj, r, conf = dmf.sample_with_negatives(
+        events, cfg.n_items, ocfg.neg_samples, rng)
+
+    cap = ocfg.batch_cap
+    total = len(ui)
+    for s in range(0, total, cap):
+        sl = slice(s, min(s + cap, total))
+        b = sl.stop - sl.start
+        pad = cap - b
+        yield (
+            jnp.asarray(np.pad(ui[sl], (0, pad)).astype(np.int32)),
+            jnp.asarray(np.pad(vj[sl], (0, pad)).astype(np.int32)),
+            jnp.asarray(np.pad(r[sl], (0, pad)).astype(np.float32)),
+            jnp.asarray(np.pad(conf[sl], (0, pad)).astype(np.float32)),
+            jnp.asarray((np.arange(cap) < b).astype(np.float32)),
+        )
+
+
+def touched_from_events(events: np.ndarray,
+                        nbr: graph_lib.NeighborTable) -> tuple[np.ndarray, np.ndarray]:
+    """(affected, touched): the users whose factors a refresh may write.
+    Touched = affected ∪ {their positive-weight neighbor-table receivers};
+    padded table slots (weight 0) are scatter no-ops and don't count."""
+    affected = np.unique(np.asarray(events)[:, 0]).astype(np.int64)
+    idx = np.asarray(nbr.idx)[affected]
+    wgt = np.asarray(nbr.wgt)[affected]
+    receivers = np.unique(idx[wgt > 0])
+    touched = np.union1d(affected, receivers)
+    return affected, touched
+
+
+def online_refresh(
+    state: dmf.DMFState,
+    nbr: graph_lib.NeighborTable,
+    events: np.ndarray,            # (n, 2) int (user, item) new check-ins
+    cfg: dmf.DMFConfig,
+    ocfg: OnlineConfig = OnlineConfig(),
+    rng: np.random.Generator | None = None,
+) -> tuple[dmf.DMFState, RefreshReport]:
+    """Apply the Eq. 9-11 local step for the affected users and scatter the
+    global-factor gradients to their neighbor-table receivers. Returns the
+    refreshed state and a locality report.
+
+    **Takes ownership of ``state``'s buffers**: they are donated to the
+    refresh step (no (I, J, K) copy per event batch) and deleted by XLA —
+    reading the old ``state`` afterwards raises. Pass a copy
+    (``jnp.array(x)`` per field) if the caller still needs it;
+    `ServingEngine` copies once at construction for exactly this reason."""
+    events = np.asarray(events)
+    if len(events) == 0:
+        return state, RefreshReport(
+            np.empty(0, np.int64), np.empty(0, np.int64), [], 0, 0)
+    rng = rng or np.random.default_rng(cfg.seed)
+    affected, touched = touched_from_events(events, nbr)
+
+    U, P, Q = state.U, state.P, state.Q
+    losses = []
+    n_batches = 0
+    for _ in range(ocfg.steps):
+        for ui, vj, r, conf, valid in _event_batches(events, cfg, ocfg, rng):
+            U, P, Q, loss = _refresh_step(
+                U, P, Q, nbr.idx, nbr.wgt, ui, vj, r, conf, valid, cfg)
+            losses.append(float(loss))
+            n_batches += 1
+    report = RefreshReport(
+        affected_users=affected,
+        touched_users=touched,
+        losses=losses,
+        n_events=int(len(events)),
+        n_batches=n_batches,
+    )
+    return dmf.DMFState(U, P, Q), report

@@ -1,0 +1,332 @@
+"""Serving subsystem: candidate index, fused serve kernel, engine == dense
+oracle, microbatcher, and online refresh (locality + tracking)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph, metrics
+from repro.data import synthetic_poi
+from repro.kernels import ops, ref
+from repro.serving import (OnlineConfig, ServingConfig, ServingEngine,
+                           build_candidate_index, index_from_dataset,
+                           online_refresh)
+
+pytestmark = pytest.mark.serving
+
+
+def _world(seed=0, epochs=6):
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=50, n_ratings=600, n_cities=4, seed=seed))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                        beta=0.1, gamma=0.01, batch_size=64)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=epochs)
+    return ds, nbr, cfg, res.state
+
+
+# --------------------------------------------------------------- candidates
+def test_candidate_index_structure():
+    ds, *_ = _world(epochs=0)
+    idx = index_from_dataset(ds)
+    assert idx.cap % 128 == 0
+    assert idx.bucket_items.shape == (idx.n_buckets, idx.cap)
+    for c in range(idx.n_buckets):
+        row = idx.bucket_items[c]
+        items = row[row >= 0]
+        # exactly the city's items, ascending, padding all -1 at the tail
+        np.testing.assert_array_equal(items, np.flatnonzero(ds.item_city == c))
+        assert (row[len(items):] == -1).all()
+    assert idx.n_truncated_buckets == 0
+    assert idx.user_fits().all()
+    # eligibility oracle rows match the buckets
+    elig = idx.eligible_mask(np.arange(ds.n_users))
+    for u in range(ds.n_users):
+        np.testing.assert_array_equal(
+            np.flatnonzero(elig[u]), np.flatnonzero(ds.item_city == ds.user_city[u]))
+
+
+def test_candidate_index_truncation_priority():
+    item_city = np.zeros(300, np.int64)      # one city of 300 > cap=128
+    user_city = np.zeros(4, np.int64)
+    pop = np.arange(300)                     # priority = item id
+    idx = build_candidate_index(item_city, user_city, cap=128,
+                                item_priority=pop)
+    assert idx.cap == 128
+    assert idx.n_truncated_buckets == 1
+    assert not idx.user_fits().any()
+    kept = idx.bucket_items[0]
+    # highest-priority 128 items survive, re-sorted ascending (contractual)
+    np.testing.assert_array_equal(kept, np.arange(300 - 128, 300))
+
+
+# ------------------------------------------------------------- serve kernel
+def _random_candidates(rng, R, J, Cw):
+    cand = np.full((R, Cw), -1, np.int32)
+    for r in range(R):
+        n = rng.integers(0, min(J, Cw) + 1)
+        cand[r, :n] = np.sort(rng.choice(J, size=n, replace=False))
+    return cand
+
+
+@pytest.mark.parametrize("R,J,K,Cw,k", [
+    (13, 90, 10, 37, 7),     # nothing aligned: exercises all pads
+    (8, 128, 8, 128, 5),     # fully aligned
+    (3, 300, 6, 260, 10),    # J and Cw span multiple item tiles
+])
+def test_serve_topk_matches_oracle_exactly(R, J, K, Cw, k):
+    rng = np.random.default_rng(R + J + k)
+    U = jnp.asarray(rng.normal(size=(R, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(R, J, K)), jnp.float32)
+    seen = jnp.asarray(rng.random((R, J)) < 0.3)
+    cand = jnp.asarray(_random_candidates(rng, R, J, Cw))
+    vals, idx = ops.serve_topk(U, V, cand, seen, k)
+    v_ref, i_ref = ref.serve_topk_ref(U, V, cand, seen, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(v_ref))
+
+
+def test_serve_topk_exact_ties_break_by_lowest_id():
+    # zero item factors -> every candidate scores exactly 0.0; the kernel
+    # must resolve ties like lax.top_k: lowest item id first
+    rng = np.random.default_rng(0)
+    R, J, K, k = 5, 60, 4, 6
+    U = jnp.asarray(rng.normal(size=(R, K)), jnp.float32)
+    V = jnp.zeros((R, J, K), jnp.float32)
+    seen = jnp.zeros((R, J), bool)
+    cand = jnp.asarray(_random_candidates(rng, R, J, 40))
+    vals, idx = ops.serve_topk(U, V, cand, seen, k)
+    v_ref, i_ref = ref.serve_topk_ref(U, V, cand, seen, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(v_ref))
+
+
+def test_serve_topk_k_exceeds_bucket_size():
+    rng = np.random.default_rng(1)
+    R, J, K, k = 6, 50, 5, 10
+    U = jnp.asarray(rng.normal(size=(R, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(R, J, K)), jnp.float32)
+    seen = jnp.zeros((R, J), bool)
+    cand = np.full((R, 16), -1, np.int32)
+    for r in range(R):                       # buckets of size 0..5 < k
+        cand[r, : r] = np.arange(r) * 7
+    vals, idx = ops.serve_topk(U, V, jnp.asarray(cand), seen, k)
+    v_ref, i_ref = ref.serve_topk_ref(U, V, jnp.asarray(cand), seen, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(v_ref))
+    for r in range(R):                       # exactly bucket-size slots fill
+        assert (np.asarray(idx)[r] >= 0).sum() == r
+
+
+def test_serve_topk_all_seen_users():
+    rng = np.random.default_rng(2)
+    R, J, K, k = 4, 40, 6, 5
+    U = jnp.asarray(rng.normal(size=(R, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(R, J, K)), jnp.float32)
+    cand = jnp.asarray(_random_candidates(rng, R, J, 24))
+    seen = jnp.ones((R, J), bool)
+    vals, idx = ops.serve_topk(U, V, cand, seen, k)
+    assert (np.asarray(idx) == -1).all()
+    assert (np.asarray(vals) <= ref.NEG_INF).all()
+    v_ref, i_ref = ref.serve_topk_ref(U, V, cand, seen, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+
+
+# --------------------------------------------- peruser kernel edge coverage
+def _peruser_oracle(U, V, mask, k):
+    vals, idx = ref.topk_scores_peruser_ref(U, V, mask, k)
+    return ref.masked_topk_finalize(jnp.where(jnp.isneginf(vals),
+                                              ref.NEG_INF, vals), idx)
+
+
+def test_recommend_topk_peruser_j_not_tile_divisible():
+    rng = np.random.default_rng(3)
+    I, J, K, k = 20, 130, 7, 5         # J % 128 != 0 -> wrapper pads items
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    mask = jnp.asarray(rng.random((I, J)) < 0.2)
+    vals, idx = ops.recommend_topk_peruser(U, V, mask, k)
+    v_ref, i_ref = _peruser_oracle(U, V, mask, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               rtol=1e-6, atol=1e-6)
+    assert (np.asarray(idx) < J).all(), "padded item column recommended"
+
+
+def test_recommend_topk_peruser_k_exceeds_unseen():
+    rng = np.random.default_rng(4)
+    I, J, K, k = 8, 30, 5, 16
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    mask = np.ones((I, J), bool)
+    mask[:, :4] = False                   # only 4 unseen items, k=16
+    vals, idx = ops.recommend_topk_peruser(U, V, jnp.asarray(mask), k)
+    v_ref, i_ref = _peruser_oracle(U, V, jnp.asarray(mask), k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    assert ((np.asarray(idx)[:, 4:]) == -1).all()
+
+
+def test_recommend_topk_peruser_all_seen():
+    rng = np.random.default_rng(5)
+    I, J, K, k = 6, 64, 4, 5
+    U = jnp.asarray(rng.normal(size=(I, K)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(I, J, K)), jnp.float32)
+    mask = jnp.ones((I, J), bool)
+    vals, idx = ops.recommend_topk_peruser(U, V, mask, k)
+    assert (np.asarray(idx) == -1).all()
+    assert (np.asarray(vals) <= ref.NEG_INF).all()
+
+
+# ------------------------------------------------------------------- engine
+def test_engine_pruned_matches_serve_oracle_exactly():
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train)
+    users = np.random.default_rng(7).integers(0, ds.n_users, 53)
+    vals, idx = eng.recommend(users)
+    v_ref, i_ref = ref.serve_topk_ref(
+        jnp.asarray(state.U[users]),
+        jnp.asarray((state.P + state.Q)[users]),
+        jnp.asarray(index.bucket_items[index.user_bucket[users]]),
+        jnp.asarray(np.asarray(eng.seen)[users]), 5)
+    np.testing.assert_array_equal(idx, np.asarray(i_ref))
+    np.testing.assert_array_equal(vals, np.asarray(v_ref))
+    assert eng.stats.n_requests == 53
+    assert eng.stats.n_dispatches == 4       # ceil(53 / 16) fixed-shape batches
+
+
+def test_engine_equals_full_dense_oracle_where_topk_in_bucket():
+    """Acceptance: engine top-k == dense scores() + mask + top_k, exactly
+    (indices and values), for users whose dense top-k fits the bucket."""
+    ds, nbr, cfg, state = _world(epochs=10)
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=32, k=5),
+                        train=ds.train)
+    users = np.arange(ds.n_users)
+    vals, idx = eng.recommend(users)
+    # dense full-J oracle, same score contraction as scores(): u · (p + q)
+    V = state.P + state.Q
+    full_cand = jnp.broadcast_to(jnp.arange(ds.n_items, dtype=jnp.int32),
+                                 (ds.n_users, ds.n_items))
+    dv, di = ref.serve_topk_ref(
+        jnp.asarray(state.U), jnp.asarray(V), full_cand,
+        jnp.asarray(np.asarray(eng.seen)), 5)
+    dv, di = np.asarray(dv), np.asarray(di)
+    in_bucket = np.array([
+        np.isin(di[u][di[u] >= 0],
+                index.bucket_items[index.user_bucket[u]]).all()
+        for u in range(ds.n_users)])
+    assert in_bucket.any(), "no user's dense top-k fits their bucket"
+    np.testing.assert_array_equal(idx[in_bucket], di[in_bucket])
+    np.testing.assert_array_equal(vals[in_bucket], dv[in_bucket])
+
+
+def test_engine_dense_path_matches_peruser_kernel():
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index,
+                        ServingConfig(microbatch=16, k=5, prune=False),
+                        train=ds.train)
+    users = np.random.default_rng(8).integers(0, ds.n_users, 20)
+    _, idx = eng.recommend(users)
+    _, i_ref = ops.recommend_topk_peruser(
+        jnp.asarray(state.U[users]),
+        jnp.asarray((state.P + state.Q)[users]),
+        jnp.asarray(np.asarray(eng.seen)[users]), 5)
+    np.testing.assert_array_equal(idx, np.asarray(i_ref))
+
+
+def test_engine_never_recommends_seen_or_out_of_city():
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=10),
+                        train=ds.train)
+    train_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    users = np.arange(ds.n_users)
+    _, idx = eng.recommend(users)
+    for u in users:
+        rec = idx[u][idx[u] >= 0]
+        assert not train_mask[u, rec].any(), "seen item recommended"
+        assert (ds.item_city[rec] == ds.user_city[u]).all(), "out-of-city rec"
+
+
+# ----------------------------------------------------------- online refresh
+def test_online_refresh_decreases_loss_on_streamed_checkins():
+    ds, nbr, cfg, state = _world(epochs=4)
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    events = ds.test[: min(30, len(ds.test))]
+    before = dmf.test_loss(eng.state, events)
+    report = eng.ingest(events, OnlineConfig(batch_cap=128, steps=3))
+    after = dmf.test_loss(eng.state, events)
+    assert after < before, (before, after)
+    assert report.n_events == len(events)
+    # served view and seen-filter track the refresh
+    np.testing.assert_allclose(
+        np.asarray(eng.V), np.asarray(eng.state.P + eng.state.Q), atol=0)
+    assert np.asarray(eng.seen)[events[:, 0], events[:, 1]].all()
+
+
+def test_online_refresh_touches_only_neighbor_table_receivers():
+    """Acceptance: a refresh writes U/Q only for affected users and P only
+    for their neighbor-table receivers; everyone else is bit-identical."""
+    ds, nbr, cfg, state = _world(epochs=2)
+    U0 = np.asarray(state.U).copy()
+    P0 = np.asarray(state.P).copy()
+    Q0 = np.asarray(state.Q).copy()
+    events = ds.test[:12]
+    new_state, report = online_refresh(
+        state, nbr, events, cfg, OnlineConfig(batch_cap=64, steps=2))
+    affected = set(report.affected_users.tolist())
+    touched = set(report.touched_users.tolist())
+    assert affected == set(np.unique(events[:, 0]).tolist())
+    assert affected <= touched
+    # receivers come from the positive-weight neighbor table rows
+    wall = np.asarray(nbr.wgt)
+    iall = np.asarray(nbr.idx)
+    expect_recv = set()
+    for u in affected:
+        expect_recv |= set(iall[u][wall[u] > 0].tolist())
+    assert touched == affected | expect_recv
+    dU = np.flatnonzero(np.abs(np.asarray(new_state.U) - U0).max(1) > 0)
+    dQ = np.flatnonzero(np.abs(np.asarray(new_state.Q) - Q0).max((1, 2)) > 0)
+    dP = np.flatnonzero(np.abs(np.asarray(new_state.P) - P0).max((1, 2)) > 0)
+    assert set(dU.tolist()) <= affected
+    assert set(dQ.tolist()) <= affected
+    assert set(dP.tolist()) <= touched
+    # untouched rows are bit-identical, not just close
+    untouched = sorted(set(range(ds.n_users)) - touched)
+    np.testing.assert_array_equal(np.asarray(new_state.P)[untouched],
+                                  P0[untouched])
+
+
+def test_online_refresh_empty_events_noop():
+    ds, nbr, cfg, state = _world(epochs=1)
+    new_state, report = online_refresh(
+        state, nbr, np.empty((0, 2), np.int64), cfg)
+    assert report.n_events == 0 and report.n_batches == 0
+    np.testing.assert_array_equal(np.asarray(new_state.U), np.asarray(state.U))
+
+
+def test_online_refresh_padded_rows_are_exact_noops():
+    """batch_cap >> n_events: padded conf=0/valid=0 rows must contribute
+    exactly nothing (regularizer pulls masked too)."""
+    ds, nbr, cfg, state = _world(epochs=1, seed=3)
+    # host copies: the refresh step donates its U/P/Q buffers
+    U0, P0, Q0 = (np.asarray(x).copy() for x in (state.U, state.P, state.Q))
+    events = ds.test[:5]
+
+    def run(cap, seed=11):
+        st = dmf.DMFState(jnp.asarray(U0), jnp.asarray(P0), jnp.asarray(Q0))
+        new, _ = online_refresh(st, nbr, events, cfg,
+                                OnlineConfig(batch_cap=cap, steps=1),
+                                rng=np.random.default_rng(seed))
+        return new
+
+    sa, sb = run(cap=32), run(cap=512)   # same negative draws, 16x more pad
+    np.testing.assert_array_equal(np.asarray(sa.U), np.asarray(sb.U))
+    np.testing.assert_array_equal(np.asarray(sa.P), np.asarray(sb.P))
+    np.testing.assert_array_equal(np.asarray(sa.Q), np.asarray(sb.Q))
