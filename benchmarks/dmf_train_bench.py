@@ -1,16 +1,26 @@
 """DMF training-path benchmark: seed dense per-batch loop vs the
-sparse-neighborhood scan epoch vs sparse-scan + fused Pallas step.
+sparse-neighborhood scan epoch vs sparse-scan + fused Pallas step, plus the
+learner-sharded SPMD epoch by shard count.
 
 Measures epochs/sec at a Foursquare-scale synthetic config (default
 I=2048, J=1024, K=10, N=2, D=3 — the perf-trajectory anchor) and checks
 the train/test loss trajectories of the fast paths against the dense
-reference (must agree within 1e-4). Writes ``BENCH_dmf_train.json`` to
-benchmarks/results/ and the repo root.
+reference (must agree within 1e-4). The ``sharded`` section runs the SPMD
+path at I=4096 for shard counts 1/2/4/8 — it needs the host devices
+provisioned before jax starts:
 
-    PYTHONPATH=src python -m benchmarks.dmf_train_bench
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.dmf_train_bench
+    # or: PYTHONPATH=src python -m benchmarks.run --only dmf_train --devices 8
+
+(shard counts above the provisioned device count are recorded as skipped;
+ on a CPU host the virtual devices share the physical cores, so epochs/sec
+ there measures dispatch/SPMD overhead, not real-parallel speedup).
+Writes ``BENCH_dmf_train.json`` to benchmarks/results/ and the repo root.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 
@@ -36,8 +46,59 @@ def _time_epochs(epoch_fn, state, n_timed: int, cfg, train, prop):
     return n_timed / dt
 
 
-def main(full: bool = False, n_timed: int = 3, n_check: int = 4) -> dict:
-    if full:
+def sharded_section(full: bool, tiny: bool, n_timed: int, n_check: int,
+                    shard_counts=(1, 2, 4, 8)) -> dict:
+    """Learner-sharded SPMD epochs by shard count (tentpole perf contract:
+    sharded == single-device sparse path, measured at I=4096+)."""
+    if tiny:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=256, n_items=128, n_ratings=1500, n_cities=4)
+    elif full:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=8192, n_items=2048, n_ratings=48000, n_cities=32)
+    else:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=4096, n_items=1024, n_ratings=24000, n_cities=16)
+    ds = synthetic_poi.generate(dcfg)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    n_devices = len(jax.devices())
+    out = {
+        "config": {"n_users": ds.n_users, "n_items": ds.n_items,
+                   "n_train": int(len(ds.train)), "n_devices": n_devices,
+                   "neighbor_table_width_S": int(nbr.idx.shape[1])},
+        "epochs_per_sec": {},
+        "train_loss_max_diff_vs_sparse": {},
+    }
+    base_cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                             beta=0.1, gamma=0.01)
+    ref = dmf.fit(base_cfg, ds.train, nbr, epochs=n_check)
+    for n_shards in shard_counts:
+        key = f"shards_{n_shards}"
+        if n_shards > n_devices:
+            out["epochs_per_sec"][key] = None
+            out["train_loss_max_diff_vs_sparse"][key] = (
+                f"skipped: {n_devices} devices")
+            continue
+        cfg = dataclasses.replace(base_cfg, n_shards=n_shards)
+        from repro.sharding import dmf as sharded_dmf
+        plan = sharded_dmf.make_shard_plan(nbr, cfg) if n_shards > 1 else nbr
+        out["epochs_per_sec"][key] = _time_epochs(
+            dmf.train_epoch, dmf.init_state(cfg), n_timed, cfg, ds.train, plan)
+        rs = dmf.fit(cfg, ds.train, nbr, epochs=n_check)
+        out["train_loss_max_diff_vs_sparse"][key] = float(
+            np.abs(np.asarray(ref.train_losses)
+                   - np.asarray(rs.train_losses)).max())
+    return out
+
+
+def main(full: bool = False, n_timed: int = 3, n_check: int = 4,
+         tiny: bool = False) -> dict:
+    if tiny:
+        dcfg = synthetic_poi.POIDatasetConfig(
+            n_users=256, n_items=128, n_ratings=1500, n_cities=4)
+    elif full:
         dcfg = synthetic_poi.POIDatasetConfig(
             n_users=6524, n_items=3197, n_ratings=26186, n_cities=117)
     else:
@@ -88,6 +149,8 @@ def main(full: bool = False, n_timed: int = 3, n_check: int = 4) -> dict:
         "train_losses_dense": rd.train_losses,
         "train_losses_sparse": rs.train_losses,
     }
+    res["sharded"] = sharded_section(
+        full, tiny, n_timed=max(1, n_timed - 1), n_check=min(n_check, 3))
     common.save_json("BENCH_dmf_train", res)   # mirrors to repo root
     return res
 

@@ -5,6 +5,8 @@ writes JSON artifacts to benchmarks/results/.
   PYTHONPATH=src python -m benchmarks.run            # quick (CI) sizes
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
   PYTHONPATH=src python -m benchmarks.run --only paper_tables,roofline
+  PYTHONPATH=src python -m benchmarks.run --only dmf_train,serving --devices 8
+                                # ^ learner-sharded sections need host devices
 """
 from __future__ import annotations
 
@@ -21,7 +23,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices (the dmf_train/"
+                         "serving `sharded` sections need 8; 0 = leave the "
+                         "jax default — sharded entries are then recorded "
+                         "as skipped)")
     args = ap.parse_args()
+    if args.devices > 0:
+        # must happen before ANY jax backend init — the bench modules are
+        # imported lazily below for exactly this reason (importing
+        # repro.launch.mesh itself is safe: imports don't bind XLA_FLAGS)
+        from repro.launch.mesh import ensure_host_platform_devices
+
+        ensure_host_platform_devices(args.devices)
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import common
@@ -100,6 +114,14 @@ def main() -> None:
             f"speedup={res['speedup_sparse_vs_dense']:.1f}x;"
             f"loss_dev={res['train_loss_max_diff_sparse']:.2e}"
         )
+        sh = res["sharded"]
+        eps_sh = ";".join(
+            f"{k}={v:.3f}eps" for k, v in sh["epochs_per_sec"].items()
+            if v is not None)
+        print(
+            f"dmf_train_sharded,0,I={sh['config']['n_users']};"
+            f"devices={sh['config']['n_devices']};{eps_sh or 'all_skipped'}"
+        )
 
     if want("serving"):
         from benchmarks import serving_bench
@@ -117,6 +139,14 @@ def main() -> None:
             f"agree_in_bucket="
             f"{res['pruned_dense_topk_agreement_where_in_bucket']:.3f};"
             f"agree_raw={res['pruned_dense_topk_agreement']:.3f}"
+        )
+        sh = res["sharded"]
+        rps_sh = ";".join(
+            f"{k}={v:.1f}rps" for k, v in sh["requests_per_sec"].items()
+            if v is not None)
+        print(
+            f"serving_sharded,0,devices={sh['config']['n_devices']};"
+            f"{rps_sh or 'all_skipped'}"
         )
 
     if want("complexity"):

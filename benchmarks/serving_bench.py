@@ -15,7 +15,14 @@ Also reports how often the pruned top-k agrees with the dense full-J
 top-k (Fig. 2 says almost always) and the per-microbatch latency
 percentiles of both engine paths.
 
-    PYTHONPATH=src python -m benchmarks.serving_bench
+The ``sharded`` section measures the learner-sharded SPMD engine
+(`ServingConfig.n_shards`) by shard count — each dispatch serves
+microbatch×n_shards requests, recommendations bit-identical to the
+single-shard engine. Needs host devices provisioned before jax starts:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.serving_bench
+    # or: PYTHONPATH=src python -m benchmarks.run --only serving --devices 8
 """
 from __future__ import annotations
 
@@ -49,11 +56,12 @@ def _loop_per_request(state, seen, users, k, n_timed):
     return n_timed / dt
 
 
-def _engine_path(state, index, train, users, k, microbatch, prune, interpret=True):
+def _engine_path(state, index, train, users, k, microbatch, prune,
+                 interpret=True, n_shards=1):
     eng = ServingEngine(
         state, index,
         ServingConfig(microbatch=microbatch, k=k, prune=prune,
-                      interpret=interpret),
+                      interpret=interpret, n_shards=n_shards),
         train=train,
     )
     eng.recommend(users[:microbatch])      # warm/compile
@@ -62,23 +70,61 @@ def _engine_path(state, index, train, users, k, microbatch, prune, interpret=Tru
     return eng.requests_per_sec, eng.stats.latency_percentiles(), idx
 
 
-def main(full: bool = False) -> dict:
-    ds = synthetic_poi.foursquare_like(reduced=not full)
+def sharded_section(state, index, train, users, k, microbatch,
+                    shard_counts=(1, 2, 4, 8)) -> dict:
+    """SPMD engine by shard count: requests/sec, per-dispatch latency, and
+    exactness vs the single-shard pruned engine (must be 1.0 — same kernel,
+    same rows, just gathered shard-locally). The shards_1 grid entry doubles
+    as the exactness reference — deterministic engine, so no separate
+    reference pass."""
+    n_devices = len(jax.devices())
+    assert shard_counts and shard_counts[0] == 1, (
+        "shards_1 is the exactness reference and must lead the grid")
+    idx_ref = None
+    out = {"config": {"n_devices": n_devices, "n_requests": int(len(users)),
+                      "microbatch": microbatch},
+           "requests_per_sec": {}, "latency_ms": {},
+           "exact_match_vs_single_shard": {}}
+    for n_shards in shard_counts:
+        key = f"shards_{n_shards}"
+        if n_shards > n_devices:
+            out["requests_per_sec"][key] = None
+            out["exact_match_vs_single_shard"][key] = (
+                f"skipped: {n_devices} devices")
+            continue
+        rps, lat, idx = _engine_path(state, index, train, users, k,
+                                     microbatch, prune=True,
+                                     n_shards=n_shards)
+        if idx_ref is None:
+            idx_ref = idx
+        out["requests_per_sec"][key] = rps
+        out["latency_ms"][key] = lat
+        out["exact_match_vs_single_shard"][key] = float(
+            (np.asarray(idx) == np.asarray(idx_ref)).all(axis=1).mean())
+    return out
+
+
+def main(full: bool = False, tiny: bool = False) -> dict:
+    if tiny:
+        ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+            n_users=128, n_items=96, n_ratings=900, n_cities=4))
+    else:
+        ds = synthetic_poi.foursquare_like(reduced=not full)
     gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
     W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
     nbr = graph.walk_neighbor_table(W, gcfg)
     cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
                         beta=0.1, gamma=0.01)
-    res = dmf.fit(cfg, ds.train, nbr, epochs=20 if not full else 40)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=40 if full else (6 if tiny else 20))
     index = index_from_dataset(ds)
 
     from repro.core import metrics as metrics_lib
     seen = metrics_lib.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
 
     k = 10
-    microbatch = 64
-    n_requests = 256 if not full else 1024
-    n_loop = 32 if not full else 64        # the loop path is slow by design
+    microbatch = 16 if tiny else 64
+    n_requests = 64 if tiny else (256 if not full else 1024)
+    n_loop = 8 if tiny else (32 if not full else 64)  # loop path slow by design
     rng = np.random.default_rng(0)
     users = rng.integers(0, ds.n_users, n_requests)
 
@@ -126,6 +172,11 @@ def main(full: bool = False) -> dict:
         "pruned_dense_topk_agreement_where_in_bucket": float(
             agree[in_bucket].mean() if in_bucket.any() else 1.0),
     }
+    # SPMD engine by shard count (more requests: each dispatch serves
+    # microbatch×shards, so the single-shard request count undersamples)
+    sh_users = rng.integers(0, ds.n_users, n_requests * 4)
+    res_json["sharded"] = sharded_section(
+        res.state, index, ds.train, sh_users, k, microbatch)
     common.save_json("BENCH_serving", res_json)   # mirrors to repo root
     return res_json
 

@@ -67,9 +67,12 @@ class DMFConfig:
     seed: int = 0
     use_pallas: bool = False         # fused Pallas step kernel (ops.dmf_fused_step)
     pallas_interpret: bool = True    # interpret=True on CPU; False on real TPU
+    n_shards: int = 1                # learner-mesh width; >1 = SPMD epochs over
+                                     # a row-sharded U/P/Q (sharding/dmf.py)
 
     def __post_init__(self):
         assert self.mode in ("dmf", "gdmf", "ldmf"), self.mode
+        assert self.n_shards >= 1, self.n_shards
 
 
 @dataclasses.dataclass
@@ -151,21 +154,20 @@ def _batch_step(
     return U, P, Q, loss
 
 
-def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
-                         valid=None):
-    """One minibatch of Alg. 1 against the sparse neighbor table.
+def _step_deltas(U, P, Q, ui, vj, r, conf, cfg: DMFConfig, valid=None):
+    """Gather + Eqs. 9-11 for one minibatch: returns the lr-scaled U/Q
+    deltas ``(du, dq)``, the raw global-factor gradient message ``gp``
+    (scaled by -θ and the walk weight at scatter time), and the batch loss.
 
-    Identical math to `_batch_step`; only the line 13-15 propagation differs:
-    instead of weighting gp by a full (I,) column of M, each sender's (S,)
-    receiver row is gathered and scatter-added — padded self-index slots
-    carry weight 0 and are exact no-ops.
+    The SINGLE definition of the per-row step math, shared by every fast
+    path — the sparse scan, the online refresh, and the learner-sharded
+    SPMD epoch (sharding/dmf.py) — so they cannot silently diverge from
+    each other or from the fused Pallas kernel behind ``cfg.use_pallas``.
 
-    ``valid`` (optional (B,) bool/float) marks real rows in a padded batch
-    (the online-refresh path pads event streams to a fixed dispatch shape).
+    ``valid`` (optional (B,) bool/float) marks real rows in a padded batch.
     Invalid rows contribute exactly nothing: conf=0 already zeroes their
     error term, but the α/β/γ regularizer pulls survive in the gradients,
-    so all three deltas are masked before the scatters.
-    """
+    so all three deltas are masked here, before any scatter."""
     theta = cfg.lr
     if cfg.use_pallas:
         from repro.kernels import ops
@@ -183,6 +185,20 @@ def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFCon
         du = du * keep
         dq = dq * keep
         gp = gp * keep
+    return du, gp, dq, loss
+
+
+def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
+                         valid=None):
+    """One minibatch of Alg. 1 against the sparse neighbor table.
+
+    Identical math to `_batch_step`; only the line 13-15 propagation differs:
+    instead of weighting gp by a full (I,) column of M, each sender's (S,)
+    receiver row is gathered and scatter-added — padded self-index slots
+    carry weight 0 and are exact no-ops.
+    """
+    theta = cfg.lr
+    du, gp, dq, loss = _step_deltas(U, P, Q, ui, vj, r, conf, cfg, valid)
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
@@ -297,7 +313,16 @@ def train_epoch(
 ) -> tuple[DMFState, float]:
     """Sparse-neighborhood scan epoch: one jitted dispatch for the whole
     epoch, O(B·S·K) propagation per batch. Passing a dense M converts it
-    per call — convert once via `graph.walk_neighbor_table` in loops."""
+    per call — convert once via `graph.walk_neighbor_table` in loops.
+
+    With ``cfg.n_shards > 1`` the epoch runs learner-sharded: same minibatch
+    stream, rows routed to each user's home shard, one SPMD dispatch over
+    the ``learners`` mesh (sharding/dmf.py). The returned state's learner
+    axis stays padded+sharded between epochs; `fit` unpads at the end, or
+    call `sharding.dmf.unpad_state` yourself."""
+    if cfg.n_shards > 1:
+        from repro.sharding import dmf as sharded_dmf
+        return sharded_dmf.train_epoch_sharded(state, prop, train, cfg, rng)
     nbr = _as_neighbor_table(prop)
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
@@ -357,8 +382,13 @@ def fit(
         assert not isinstance(M, graph_lib.NeighborTable), (
             "dense_reference needs the dense M"
         )
+        assert cfg.n_shards == 1, "dense_reference is the single-device oracle"
         prop = jnp.asarray(M)
         epoch_fn = train_epoch_dense
+    elif cfg.n_shards > 1:
+        from repro.sharding import dmf as sharded_dmf
+        prop = sharded_dmf.make_shard_plan(_as_neighbor_table(M), cfg)
+        epoch_fn = train_epoch
     else:
         prop = _as_neighbor_table(M)
         epoch_fn = train_epoch
@@ -370,17 +400,26 @@ def fit(
             te_losses.append(test_loss(state, test))
         if callback is not None:
             callback(t, state, l)
+    if cfg.n_shards > 1 and not dense_reference:
+        from repro.sharding import dmf as sharded_dmf
+        state = sharded_dmf.unpad_state(state, cfg.n_users)
     return FitResult(state, tr_losses, te_losses)
 
 
 def evaluate(
     state: DMFState, train: np.ndarray, test: np.ndarray, n_users: int, n_items: int,
-    ks=(5, 10), interpret: bool = True,
+    ks=(5, 10), interpret: bool = True, n_shards: int = 1,
 ) -> dict[str, float]:
     """Ranking metrics via the streaming top-k kernel: the (I, J) score
     matrix never materializes — per-user running top-k is carried across
-    item tiles (ops.recommend_topk_peruser)."""
+    item tiles (ops.recommend_topk_peruser). ``n_shards > 1`` runs the
+    kernel learner-sharded over the mesh (row-parallel, same results)."""
     from repro.kernels import ops
+    if n_shards > 1:
+        from repro.sharding import dmf as sharded_dmf
+        return sharded_dmf.evaluate_sharded(
+            state, train, test, n_users, n_items, n_shards, ks=ks,
+            interpret=interpret)
     train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
     test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
     kmax = max(ks)

@@ -163,6 +163,60 @@ def walk_neighbor_table(W: np.ndarray, cfg: GraphConfig) -> NeighborTable:
     return neighbor_table_from_dense(walk_propagation_matrix(W, cfg))
 
 
+class PartitionedNeighborTable(NamedTuple):
+    """`NeighborTable` split for a row-sharded learner mesh (DESIGN.md §8).
+
+    Users are partitioned contiguously into ``n_shards`` shards of
+    ``rows_per_shard`` rows each (the user axis padded up to
+    ``n_shards * rows_per_shard``). Each sender row of the neighbor table is
+    split by *destination shard*: slot (i, d, s) carries the weight and the
+    **shard-local** row of receiver ``nbr.idx[i, s]`` iff that receiver
+    lives on shard d, else (0, 0.0) — a weight-0 slot scatter-adds exactly
+    zero, the same no-op convention as `NeighborTable` padding. This is the
+    fixed-shape per-shard "outbox" schema: what shard s ships to shard d for
+    sender i is precisely the (i, d, :) slice weighted by i's batch
+    gradient, so the exchange is one `all_to_all` of static shape per step.
+    """
+
+    idx: jnp.ndarray   # (I_pad, n_shards, S) int32 — receiver rows, shard-local
+    wgt: jnp.ndarray   # (I_pad, n_shards, S) float32
+    rows_per_shard: int
+    n_users: int       # real (unpadded) user count
+
+
+def partition_neighbor_table(
+    nbr: NeighborTable, n_shards: int, n_users: int | None = None
+) -> PartitionedNeighborTable:
+    """Split each user's (S,) receiver row by the receiver's home shard.
+
+    Receivers keep their walk weight but are re-indexed to shard-local rows
+    (``r % rows_per_shard``); slots whose receiver lives elsewhere become
+    (idx 0, weight 0.0) no-ops. Row-sum over destinations reconstructs the
+    original table exactly (unit-tested), so sharded propagation applies
+    precisely the same scatter mass as the single-device path.
+    """
+    idx = np.asarray(nbr.idx)
+    wgt = np.asarray(nbr.wgt)
+    I, S = idx.shape
+    if n_users is None:
+        n_users = I
+    rows = -(-I // n_shards)
+    I_pad = rows * n_shards
+    dest = idx // rows                       # (I, S) receiver home shard
+    local = idx % rows                       # (I, S) shard-local receiver row
+    live = wgt != 0.0
+    pidx = np.zeros((I_pad, n_shards, S), np.int32)
+    pwgt = np.zeros((I_pad, n_shards, S), np.float32)
+    for d in range(n_shards):
+        keep = live & (dest == d)
+        pidx[:I, d] = np.where(keep, local, 0)
+        pwgt[:I, d] = np.where(keep, wgt, 0.0)
+    return PartitionedNeighborTable(
+        idx=jnp.asarray(pidx), wgt=jnp.asarray(pwgt),
+        rows_per_shard=rows, n_users=n_users,
+    )
+
+
 def dense_from_neighbor_table(nbr: NeighborTable, n_users: int) -> np.ndarray:
     """Reconstruct the dense (I, I) M — test/debug helper (inverse of
     ``neighbor_table_from_dense`` up to padded zero-weight slots)."""

@@ -2,14 +2,35 @@
 
     PYTHONPATH=src python -m repro.launch.dmf_train \
         --dataset foursquare --dim 10 --epochs 80 --walk-length 3
+
+Learner-sharded SPMD training (one dispatch per epoch across an N-device
+``learners`` mesh; on a CPU host the devices are provisioned automatically):
+
+    PYTHONPATH=src python -m repro.launch.dmf_train --n-shards 8 --epochs 20
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-from repro.core import dmf, graph
-from repro.data import synthetic_poi
+
+def _ensure_host_devices(n: int) -> None:
+    """Provision n host-platform devices BEFORE jax initializes its backend
+    (imports are fine — only the first device query binds XLA_FLAGS)."""
+    if n <= 1:
+        return
+    from repro.launch.mesh import ensure_host_platform_devices
+
+    ensure_host_platform_devices(n)
+    import jax
+
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"--n-shards {n} needs {n} devices but jax initialized with "
+            f"{len(jax.devices())} (backend was up before the flag could "
+            f"apply); re-run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}"
+        )
 
 
 def main():
@@ -32,8 +53,16 @@ def main():
                     help="fused Pallas step kernel inside the scan epoch")
     ap.add_argument("--dense-reference", action="store_true",
                     help="seed dense per-batch path (equivalence oracle)")
+    ap.add_argument("--n-shards", type=int, default=1,
+                    help="learner-mesh width: >1 trains/evaluates SPMD over "
+                         "row-sharded U/P/Q (host devices auto-provisioned)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    _ensure_host_devices(args.n_shards)
+    # import after the device flag is set: jax binds XLA_FLAGS at backend
+    # init, which these imports may trigger (e.g. kernel warm paths)
+    from repro.core import dmf, graph
+    from repro.data import synthetic_poi
 
     maker = (synthetic_poi.foursquare_like if args.dataset == "foursquare"
              else synthetic_poi.alipay_like)
@@ -51,7 +80,7 @@ def main():
         n_users=ds.n_users, n_items=ds.n_items, dim=args.dim, mode=args.mode,
         alpha=args.alpha, beta=args.beta, gamma=args.gamma, lr=args.lr,
         neg_samples=args.neg_samples, seed=args.seed,
-        use_pallas=args.use_pallas,
+        use_pallas=args.use_pallas, n_shards=args.n_shards,
     )
     comm = graph.communication_bytes(
         W, D=args.walk_length, K=args.dim, n_ratings=len(ds.train))
@@ -59,7 +88,7 @@ def main():
               else f"S={int(prop.idx.shape[1])}")
     print(f"dataset={args.dataset} users={ds.n_users} items={ds.n_items} "
           f"train={len(ds.train)} comm/epoch={comm/1e6:.2f} MB "
-          f"propagation={fanout}")
+          f"propagation={fanout} shards={args.n_shards}")
 
     def cb(t, state, loss):
         if t % 10 == 0:
@@ -67,7 +96,8 @@ def main():
 
     res = dmf.fit(cfg, ds.train, prop, epochs=args.epochs, test=ds.test,
                   callback=cb, dense_reference=args.dense_reference)
-    ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
+    ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
+                      n_shards=args.n_shards)
     print(json.dumps({k: round(v, 4) for k, v in ev.items()}))
 
 

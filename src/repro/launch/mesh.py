@@ -6,7 +6,24 @@ sees the real single CPU device).
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def ensure_host_platform_devices(n: int) -> None:
+    """Ask XLA for ``n`` virtual host (CPU) devices by appending
+    ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS`` — unless
+    some count is already forced, which is respected. The single definition
+    for every caller that self-provisions a mesh (tests/conftest.py,
+    benchmarks/run.py --devices, the dmf_train CLI --n-shards).
+
+    Must run before the first jax *device query*: importing jax (as this
+    module does) is safe — only backend init binds the flags."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}").strip()
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):

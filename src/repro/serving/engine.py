@@ -53,6 +53,9 @@ class ServingConfig:
     k: int = 10              # recommendations per request
     prune: bool = True       # geo-pruned candidate path vs dense full-J
     interpret: bool = True   # Pallas interpret mode (CPU container default)
+    n_shards: int = 1        # learner-mesh width: >1 serves row-sharded
+                             # U/V/seen, one SPMD dispatch per microbatch
+                             # of `microbatch` requests PER SHARD
 
 
 @dataclasses.dataclass
@@ -95,6 +98,34 @@ def _dispatch_dense(U, V, seen, uids, *, k: int, interpret: bool):
         U[uids], V[uids], seen[uids], k, interpret=interpret)
 
 
+def _make_sharded_dispatch(mesh, *, k: int, interpret: bool, prune: bool):
+    """SPMD serve dispatch over the ``learners`` mesh: every shard gathers
+    its OWN users' (u_i, v^i, seen_i) rows and runs the same fused serve
+    kernel (or the dense streaming kernel) on its local microbatch — one
+    compiled dispatch serves mesh-width × microbatch requests. ``uids`` are
+    shard-LOCAL row ids shaped (n_shards, R); the candidate buckets are
+    replicated (items are global ids everywhere)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import shard_map
+    from repro.sharding.dmf import AXIS
+
+    def body(U, V, seen, user_bucket, bucket_items, uids):
+        u_l = uids[0]                        # (R,) local row ids
+        u, v, s = U[u_l], V[u_l], seen[u_l]
+        if prune:
+            cand = bucket_items[user_bucket[u_l]]
+            return ops.serve_topk(u, v, cand, s, k, interpret=interpret)
+        return ops.recommend_topk_peruser(u, v, s, k, interpret=interpret)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(None, None), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS)),
+        check_vma=False,
+    ))
+
+
 class ServingEngine:
     """Batched POI recommendation over a trained `DMFState`.
 
@@ -129,9 +160,33 @@ class ServingEngine:
             assert train is not None, "need `train` pairs or a `seen` mask"
             seen = metrics_lib.masks_from_interactions(I, J, train)
         self.seen = jnp.asarray(np.asarray(seen).astype(np.int8))
-        self.V = state.P + state.Q                # served per-learner view
         self._bucket_items = jnp.asarray(index.bucket_items)
         self._user_bucket = jnp.asarray(index.user_bucket)
+        self._sharded = cfg.n_shards > 1
+        if self._sharded:
+            # learner-sharded serving: the served views live row-sharded on
+            # the mesh (the sharded V REPLACES the single-device V = P + Q
+            # view — keeping both would double the engine's largest buffer);
+            # each SPMD dispatch serves `microbatch` requests per shard,
+            # each shard reading only its own users' rows.
+            from jax.sharding import NamedSharding, PartitionSpec as PSpec
+
+            from repro.sharding import dmf as sharded_dmf
+
+            self._mesh = sharded_dmf.make_learner_mesh(cfg.n_shards)
+            self._rows = sharded_dmf.rows_per_shard(I, cfg.n_shards)
+            I_pad = self._rows * cfg.n_shards
+            sh = NamedSharding(self._mesh, PSpec(sharded_dmf.AXIS))
+            pad = sharded_dmf.pad_rows
+            self._U_sh = jax.device_put(pad(self.state.U, I_pad), sh)
+            self._V_sh = jax.device_put(
+                pad(self.state.P + self.state.Q, I_pad), sh)
+            self._seen_sh = jax.device_put(pad(self.seen, I_pad), sh)
+            self._ub_sh = jax.device_put(pad(self._user_bucket, I_pad), sh)
+            self._dispatch_sh = _make_sharded_dispatch(
+                self._mesh, k=cfg.k, interpret=cfg.interpret, prune=cfg.prune)
+        else:
+            self.V = state.P + state.Q            # served per-learner view
         # persistent stream: successive ingest() calls must draw *fresh*
         # negatives, not replay the same ones (which would keep hammering
         # the same arbitrary items' scores down)
@@ -155,11 +210,71 @@ class ServingEngine:
             buf[n:] = buf[0]       # pad with a real user id (results dropped)
             yield buf.copy(), n
 
+    # ------------------------------------------------------------ sharded serve
+    def _sharded_dispatches(
+        self, user_ids: np.ndarray
+    ) -> Iterator[tuple[list[np.ndarray], np.ndarray, np.ndarray]]:
+        """Route requests to their user's home shard and drain the per-shard
+        queues SPMD: each dispatch takes up to `microbatch` requests from
+        EVERY shard's queue at once (uids rebased to shard-local rows,
+        padding = local row 0, results dropped). Yields
+        (positions-per-shard, vals (D, R, k), idx (D, R, k))."""
+        D, R, k = self.cfg.n_shards, self.cfg.microbatch, self.cfg.k
+        shard = user_ids // self._rows
+        queues = [np.nonzero(shard == d)[0] for d in range(D)]
+        offs = [0] * D
+        while any(o < len(q) for o, q in zip(offs, queues)):
+            uids_l = np.zeros((D, R), np.int32)
+            sel = []
+            for d in range(D):
+                take = queues[d][offs[d] : offs[d] + R]
+                offs[d] += len(take)
+                uids_l[d, : len(take)] = user_ids[take] % self._rows
+                sel.append(take)
+            t0 = time.perf_counter()
+            vals, idx = self._dispatch_sh(
+                self._U_sh, self._V_sh, self._seen_sh, self._ub_sh,
+                self._bucket_items, jnp.asarray(uids_l))
+            jax.block_until_ready(idx)
+            self.stats.dispatch_seconds.append(time.perf_counter() - t0)
+            self.stats.n_dispatches += 1
+            self.stats.n_requests += int(sum(len(t) for t in sel))
+            yield (sel, np.asarray(vals).reshape(D, R, k),
+                   np.asarray(idx).reshape(D, R, k))
+
+    def _serve_sharded(self, user_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Serve a whole batch SPMD, results in the caller's request order."""
+        k = self.cfg.k
+        out_v = np.zeros((len(user_ids), k), np.float32)
+        out_i = np.full((len(user_ids), k), -1, np.int32)
+        for sel, vals, idx in self._sharded_dispatches(user_ids):
+            for d, take in enumerate(sel):
+                if len(take):
+                    out_v[take] = vals[d, : len(take)]
+                    out_i[take] = idx[d, : len(take)]
+        return out_v, out_i
+
     def serve_stream(
         self, user_ids: Iterable[int]
     ) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
         """Drain a request stream; yields (user_ids, vals, idx) per
-        microbatch — one jitted dispatch each, padding sliced off."""
+        microbatch — one jitted dispatch each, padding sliced off.
+
+        In sharded mode (``n_shards > 1``) the stream is drained up-front,
+        requests route to their home shard, and each yield is one SPMD
+        dispatch covering up to `microbatch` requests per shard — yield
+        order follows the shard queues, not strict arrival order (use
+        `recommend` for order-preserving results)."""
+        if self._sharded:
+            ids = np.asarray(list(user_ids), np.int64)
+            for sel, vals, idx in self._sharded_dispatches(ids):
+                pos = np.concatenate([t for t in sel if len(t)])
+                v = np.concatenate(
+                    [vals[d, : len(t)] for d, t in enumerate(sel) if len(t)])
+                i = np.concatenate(
+                    [idx[d, : len(t)] for d, t in enumerate(sel) if len(t)])
+                yield ids[pos], v, i
+            return
         for buf, n in self._microbatches(user_ids):
             uids = jnp.asarray(buf)
             t0 = time.perf_counter()
@@ -179,11 +294,14 @@ class ServingEngine:
             yield buf[:n], np.asarray(vals)[:n], np.asarray(idx)[:n]
 
     def recommend(self, user_ids) -> tuple[np.ndarray, np.ndarray]:
-        """Convenience: serve a whole batch of user ids, concatenated."""
+        """Convenience: serve a whole batch of user ids, results aligned to
+        the input order (also in sharded mode)."""
         user_ids = np.asarray(user_ids)
         if len(user_ids) == 0:
             k = self.cfg.k
             return (np.empty((0, k), np.float32), np.empty((0, k), np.int32))
+        if self._sharded:
+            return self._serve_sharded(user_ids.astype(np.int64))
         vals, idx = [], []
         for _, v, i in self.serve_stream(int(u) for u in user_ids):
             vals.append(v)
@@ -212,11 +330,24 @@ class ServingEngine:
         self.state, report = online_lib.online_refresh(
             self.state, self.nbr, events, self.dmf_cfg, ocfg,
             rng if rng is not None else self._rng)
-        if len(report.touched_users):
+        if not self._sharded and len(report.touched_users):
             t = jnp.asarray(report.touched_users)
             self.V = self.V.at[t].set(self.state.P[t] + self.state.Q[t])
         if len(events):
             self.seen = self.seen.at[events[:, 0], events[:, 1]].set(1)
+        if self._sharded:
+            # apply the row patches to the sharded served views (global
+            # row ids are unchanged by padding — the pad sits at the end)
+            if len(report.touched_users):
+                t = jnp.asarray(report.touched_users)
+                self._V_sh = self._V_sh.at[t].set(
+                    self.state.P[t] + self.state.Q[t])
+            if len(report.affected_users):
+                a = jnp.asarray(report.affected_users)
+                self._U_sh = self._U_sh.at[a].set(self.state.U[a])
+            if len(events):
+                self._seen_sh = self._seen_sh.at[
+                    events[:, 0], events[:, 1]].set(1)
         self.stats.n_refreshes += 1
         self.stats.n_events += int(len(events))
         return report

@@ -1,0 +1,352 @@
+"""Learner-sharded DMF: Alg. 1 as SPMD over a ``learners`` mesh axis.
+
+The paper frames DMF as "distributed learning with multi-learners (users)";
+this module makes that literal at execution level: the learner axis of every
+per-user buffer — U (I, K), P/Q (I, J, K), the neighbor table, the serving
+engine's V/seen rows — is partitioned row-wise over an ``n_shards``-device
+mesh, and one epoch is ONE SPMD dispatch (shard_map over the existing
+`lax.scan` epoch). Item factors are *per-learner copies* already, so the
+item axis needs no sharding — only learner-to-learner messages cross shard
+boundaries, exactly like the paper's protocol.
+
+Cross-shard propagation (Alg. 1 lines 13-15): each rating's global-factor
+gradient ∂L/∂p^i_j must reach user i's ≤D-hop receivers, who may live on
+other shards. `graph.partition_neighbor_table` pre-splits each sender row
+of the (I, S) neighbor table by *destination shard* into an (I, n_shards, S)
+schema, so a training step builds a fixed-shape outbox per destination —
+   (weights (D, B, S), local receiver rows (D, B, S),
+    gradients gp (D, B, K), item ids (D, B))
+— and routes it with one `lax.all_to_all` per tensor. The receiving shard
+scatter-adds ``-θ · w · gp`` into its local P rows. Weight-0 slots (receiver
+on another shard, padded batch rows, padded table slots) scatter exactly
+zero, so the sharded step applies precisely the same update mass as the
+single-device sparse path (invariance suite: tests/test_dmf_sharded.py).
+
+Privacy invariant (the paper's "only gradients ever leave a learner"): the
+outbox is a pure function of (gp, static graph tables, item ids) — built by
+`build_outbox`, which never sees ratings, u_i, or q^i. Ratings influence
+other shards only through the gp messages; a learner's U/Q rows live only
+on its home shard (tests/test_dmf_sharded.py::test_privacy_*).
+
+Batch routing: the epoch's minibatch stream is the SAME stream the
+single-device path samples (same rng), with each minibatch's rows routed
+host-side to their user's home shard and padded to a fixed per-shard
+capacity with valid=0 rows (exact no-ops, the `_sparse_batch_update`
+convention). SGD batch semantics are unchanged — a minibatch's updates are
+an order-free sum, so distributing its rows over shards is associativity,
+not approximation (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dmf as dmf_lib
+from repro.core import graph as graph_lib
+from repro.core import metrics as metrics_lib
+from repro.launch.mesh import shard_map
+
+AXIS = "learners"
+
+# jax.sharding.PartitionSpec under a second alias: inside the epoch body the
+# name ``P`` is the item-factor buffer, so specs there use ``P_``.
+P_ = P
+
+
+def rows_per_shard(n_users: int, n_shards: int) -> int:
+    return -(-n_users // n_shards)
+
+
+@functools.lru_cache(maxsize=None)
+def make_learner_mesh(n_shards: int) -> Mesh:
+    """1-D ``learners`` mesh over the first n_shards local devices. On a CPU
+    host, provision devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    initializes (tests/conftest.py does this for the test suite)."""
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise RuntimeError(
+            f"need {n_shards} devices for the learner mesh, have {len(devs)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} before jax initializes"
+        )
+    return Mesh(np.asarray(devs[:n_shards]), (AXIS,))
+
+
+def pad_rows(x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Zero-pad axis 0 up to n_rows (identity when already there)."""
+    pad = n_rows - x.shape[0]
+    if pad == 0:
+        return x
+    assert pad > 0, (x.shape, n_rows)
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+def pad_state(state: dmf_lib.DMFState, n_rows: int) -> dmf_lib.DMFState:
+    return dmf_lib.DMFState(
+        U=pad_rows(state.U, n_rows),
+        P=pad_rows(state.P, n_rows),
+        Q=pad_rows(state.Q, n_rows),
+    )
+
+
+def unpad_state(state: dmf_lib.DMFState, n_users: int) -> dmf_lib.DMFState:
+    """Slice the learner axis back to the real user count (gathers a sharded
+    state onto the default device)."""
+    if state.U.shape[0] == n_users:
+        return state
+    return dmf_lib.DMFState(
+        U=jnp.asarray(state.U[:n_users]),
+        P=jnp.asarray(state.P[:n_users]),
+        Q=jnp.asarray(state.Q[:n_users]),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static per-run sharding artifacts: the mesh and the
+    destination-partitioned neighbor table. Build once via
+    `make_shard_plan` and reuse across epochs (dmf.fit does)."""
+
+    mesh: Mesh
+    part: graph_lib.PartitionedNeighborTable
+    n_shards: int
+
+    @property
+    def rows(self) -> int:
+        return self.part.rows_per_shard
+
+    @property
+    def n_rows_padded(self) -> int:
+        return self.part.rows_per_shard * self.n_shards
+
+
+def make_shard_plan(nbr: graph_lib.NeighborTable, cfg: dmf_lib.DMFConfig) -> ShardPlan:
+    part = graph_lib.partition_neighbor_table(nbr, cfg.n_shards, cfg.n_users)
+    return ShardPlan(mesh=make_learner_mesh(cfg.n_shards), part=part,
+                     n_shards=cfg.n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Host-side batch routing: the single-device minibatch stream, with each
+# batch's rows grouped by the sender's home shard.
+# ---------------------------------------------------------------------------
+def shard_batches(
+    ui: np.ndarray, vj: np.ndarray, r: np.ndarray, conf: np.ndarray,
+    n_shards: int, rows: int, cap_multiple: int = 32,
+):
+    """Route (nb, B) minibatch rows to their user's home shard.
+
+    Returns (ui_local, vj, r, conf, valid), each (nb, n_shards, Bs) with
+    Bs = max realized per-(batch, shard) row count rounded up to
+    ``cap_multiple`` (a stable dispatch shape across epochs: the rounded max
+    rarely moves, so the jitted epoch recompiles at most once or twice per
+    run). Padded slots carry ui=0, conf=0, valid=0 — exact no-ops in the
+    step. Row order inside a shard group preserves batch order, so
+    n_shards=1 reproduces the single-device batch stream bit-for-bit.
+    """
+    nb, B = ui.shape
+    shard = ui // rows                              # (nb, B)
+    order = np.argsort(shard, axis=1, kind="stable")
+    s_sorted = np.take_along_axis(shard, order, axis=1)
+    counts = np.zeros((nb, n_shards), np.int64)
+    np.add.at(counts, (np.repeat(np.arange(nb), B), shard.reshape(-1)), 1)
+    Bs = int(-(-max(int(counts.max()), 1) // cap_multiple) * cap_multiple)
+    start = np.concatenate(
+        [np.zeros((nb, 1), np.int64), np.cumsum(counts, axis=1)[:, :-1]], axis=1)
+    slot = np.arange(B)[None, :] - np.take_along_axis(start, s_sorted, axis=1)
+    batch_ix = np.repeat(np.arange(nb), B)
+
+    def route(x, fill=0):
+        out = np.full((nb, n_shards, Bs), fill, x.dtype)
+        xs = np.take_along_axis(x, order, axis=1)
+        out[batch_ix, s_sorted.reshape(-1), slot.reshape(-1)] = xs.reshape(-1)
+        return out
+
+    ui_l = route((ui % rows).astype(np.int32))
+    vj_s = route(vj.astype(np.int32))
+    r_s = route(r.astype(np.float32))
+    conf_s = route(conf.astype(np.float32))
+    valid = (np.arange(Bs)[None, None, :] < counts[:, :, None]).astype(np.float32)
+    return ui_l, vj_s, r_s, conf_s, valid
+
+
+# ---------------------------------------------------------------------------
+# The SPMD step: local Eq. 9-11 + all_to_all gradient-message exchange.
+# ---------------------------------------------------------------------------
+def build_outbox(gp, tbl_idx, tbl_wgt, vj):
+    """Fixed-shape per-destination outbox for one minibatch on one shard.
+
+    Pure function of the P-gradient messages ``gp (B, K)``, the *static*
+    destination-partitioned graph tables ``tbl_idx/tbl_wgt (B, D, S)``
+    (gathered for the batch's senders), and the batch item ids ``vj (B,)``.
+    It has no access to ratings, confidences, u, or q — the privacy
+    invariant "only global-factor gradients leave a learner" is structural
+    here, and tests/test_dmf_sharded.py asserts the content is a function
+    of gp alone (given the static tables): equal errors => equal outbox,
+    whatever the ratings were.
+
+    Returns (weights (D, B, S), local receiver rows (D, B, S),
+    gradients (D, B, K), item ids (D, B)) — destination-major, ready for
+    one `all_to_all` per tensor.
+    """
+    D = tbl_idx.shape[1]
+    out_w = jnp.transpose(tbl_wgt, (1, 0, 2))
+    out_i = jnp.transpose(tbl_idx, (1, 0, 2))
+    out_g = jnp.broadcast_to(gp[None], (D,) + gp.shape)
+    out_v = jnp.broadcast_to(vj[None], (D,) + vj.shape)
+    return out_w, out_i, out_g, out_v
+
+
+def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid,
+                          cfg: dmf_lib.DMFConfig):
+    """One minibatch of Alg. 1 on one shard: local gathers + Eq. 9-11 via
+    the SAME `dmf._step_deltas` as the single-device paths (the equivalence
+    suite leans on that), local U/Q scatters, and the cross-shard P-gradient
+    exchange."""
+    theta = cfg.lr
+    du, gp, dq, loss = dmf_lib._step_deltas(
+        U, P, Q, ui, vj, r, conf, cfg, valid)
+    U = U.at[ui].add(du)
+    if cfg.mode != "gdmf":
+        Q = Q.at[ui, vj].add(dq)
+    if cfg.mode != "ldmf":
+        # lines 11 + 13-15 across shards: gather the batch senders' rows of
+        # the destination-partitioned table, exchange, scatter locally.
+        out_w, out_i, out_g, out_v = build_outbox(gp, pidx[ui], pwgt[ui], vj)
+        rw = jax.lax.all_to_all(out_w, AXIS, 0, 0)   # (D, B, S) source-major
+        ri = jax.lax.all_to_all(out_i, AXIS, 0, 0)
+        rg = jax.lax.all_to_all(out_g, AXIS, 0, 0)   # (D, B, K)
+        rv = jax.lax.all_to_all(out_v, AXIS, 0, 0)   # (D, B)
+        upd = rw[..., None] * rg[:, :, None, :]      # (D, B, S, K)
+        P = P.at[ri, rv[:, :, None]].add(-theta * upd)
+    return U, P, Q, loss
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(0, 1, 2))
+def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, cfg, mesh):
+    """A full epoch as ONE SPMD dispatch: shard_map over the learner axis,
+    `lax.scan` over minibatches inside. Inputs: U (I_pad, K), P/Q
+    (I_pad, J, K), tables (I_pad, D, S), batches (nb, D, Bs). Returns the
+    updated factors and per-(batch, shard) losses (nb, D)."""
+
+    def shard_body(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid):
+        ui, vj, r, conf, valid = (x[:, 0] for x in (ui, vj, r, conf, valid))
+
+        def body(carry, batch):
+            U, P, Q = carry
+            b_ui, b_vj, b_r, b_conf, b_val = batch
+            U, P, Q, loss = _sharded_batch_update(
+                U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val, cfg)
+            return (U, P, Q), loss
+
+        (U, P, Q), losses = jax.lax.scan(
+            body, (U, P, Q), (ui, vj, r, conf, valid))
+        return U, P, Q, losses[:, None]
+
+    return shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
+                  P_(None, AXIS), P_(None, AXIS)),
+        out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS)),
+        check_vma=False,
+    )(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid)
+
+
+def _as_plan(prop, cfg: dmf_lib.DMFConfig) -> ShardPlan:
+    if isinstance(prop, ShardPlan):
+        assert prop.n_shards == cfg.n_shards, (prop.n_shards, cfg.n_shards)
+        return prop
+    if not isinstance(prop, graph_lib.NeighborTable):
+        prop = graph_lib.neighbor_table_from_dense(np.asarray(prop))
+    return make_shard_plan(prop, cfg)
+
+
+def shard_state(state: dmf_lib.DMFState, plan: ShardPlan) -> dmf_lib.DMFState:
+    """Pad the learner axis to the mesh and place each factor with its
+    row sharding (no-op if already padded; re-placement is cheap then)."""
+    sh = NamedSharding(plan.mesh, P(AXIS))
+    st = pad_state(state, plan.n_rows_padded)
+    return dmf_lib.DMFState(
+        U=jax.device_put(st.U, sh),
+        P=jax.device_put(st.P, sh),
+        Q=jax.device_put(st.Q, sh),
+    )
+
+
+def train_epoch_sharded(
+    state: dmf_lib.DMFState,
+    prop,                       # ShardPlan | graph.NeighborTable | dense M
+    train: np.ndarray,
+    cfg: dmf_lib.DMFConfig,
+    rng: np.random.Generator,
+) -> tuple[dmf_lib.DMFState, float]:
+    """Sharded counterpart of `dmf.train_epoch`: identical minibatch stream
+    (same rng consumption), rows routed to home shards, one SPMD dispatch.
+    Returns a state whose learner axis stays padded+sharded across epochs
+    (donated buffers, no per-epoch host round-trip); slice with
+    `unpad_state` when done — `dmf.fit` does both automatically."""
+    plan = _as_plan(prop, cfg)
+    ui, vj, r, conf = dmf_lib.sample_epoch(train, cfg, rng)
+    B = cfg.batch_size
+    nb = len(ui) // B
+    n = nb * B
+    shape = (nb, B)
+    ui_l, vj_s, r_s, conf_s, valid = shard_batches(
+        ui[:n].reshape(shape), vj[:n].reshape(shape),
+        r[:n].reshape(shape), conf[:n].reshape(shape),
+        cfg.n_shards, plan.rows)
+    st = shard_state(state, plan)
+    U, Pm, Q, losses = _epoch_sharded(
+        st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
+        jnp.asarray(ui_l), jnp.asarray(vj_s), jnp.asarray(r_s),
+        jnp.asarray(conf_s), jnp.asarray(valid), cfg, plan.mesh)
+    total = float(np.asarray(losses, dtype=np.float64).sum())
+    return dmf_lib.DMFState(U, Pm, Q), total / max(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded evaluation: per-user top-k is row-parallel — no communication.
+# ---------------------------------------------------------------------------
+def evaluate_sharded(
+    state: dmf_lib.DMFState, train: np.ndarray, test: np.ndarray,
+    n_users: int, n_items: int, n_shards: int, ks=(5, 10),
+    interpret: bool = True,
+) -> dict[str, float]:
+    """`dmf.evaluate` over the learner mesh: each shard streams its own
+    users' (rows, J, K) factors through the per-user top-k kernel; results
+    concatenate along the learner axis. Bit-identical to the single-device
+    kernel per user (row-parallel, no cross-shard reads)."""
+    from repro.kernels import ops
+
+    mesh = make_learner_mesh(n_shards)
+    rows = rows_per_shard(n_users, n_shards)
+    I_pad = rows * n_shards
+    kmax = max(ks)
+    train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
+    test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+    st = unpad_state(state, n_users)
+    U = pad_rows(st.U, I_pad)
+    V = pad_rows(st.P + st.Q, I_pad)
+    mask = pad_rows(jnp.asarray(train_mask.astype(np.int8)), I_pad)
+
+    def body(U_loc, V_loc, m_loc):
+        return ops.recommend_topk_peruser(
+            U_loc, V_loc, m_loc, kmax, interpret=interpret)
+
+    vals, idx = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS)),
+        check_vma=False,
+    ))(U, V, mask)
+    del vals
+    return metrics_lib.evaluate_ranking_from_topk(
+        np.asarray(idx)[:n_users], test_mask, ks)

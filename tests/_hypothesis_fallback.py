@@ -1,0 +1,139 @@
+"""Minimal, honest stand-in for the ``hypothesis`` API surface this test
+suite uses, for containers with no package index access.
+
+``tests/requirements.txt`` pins the real dependency (pytest + hypothesis);
+install it where you can — `tests/conftest.py` registers this module under
+the ``hypothesis`` name ONLY when the real package is absent, so the
+property-test modules execute (instead of `importorskip`-skipping wholesale)
+even offline. This is not a property-testing engine: no shrinking, no
+example database, no health checks — just deterministic example generation
+over the strategy subset the suite uses (`integers`, `floats`, `booleans`,
+`sampled_from`).
+
+Example schedule per test: the all-minimum and all-maximum corner examples
+first (bounds are where padding/alignment bugs live), then pseudo-random
+draws from an rng seeded by the test name — stable across runs and
+processes, so a failure reproduces. The failing example is printed in the
+assertion message, hypothesis-style.
+"""
+from __future__ import annotations
+
+import random as _random
+import types
+
+
+class _Strategy:
+    def __init__(self, lo_fn, hi_fn, draw_fn):
+        self._lo = lo_fn
+        self._hi = hi_fn
+        self._draw = draw_fn
+
+    def lo(self):
+        return self._lo()
+
+    def hi(self):
+        return self._hi()
+
+    def draw(self, rng: _random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda: min_value, lambda: max_value,
+                     lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda: min_value, lambda: max_value,
+                     lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda: False, lambda: True,
+                     lambda rng: bool(rng.getrandbits(1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda: elements[0], lambda: elements[-1],
+                     lambda rng: rng.choice(elements))
+
+
+strategies = types.ModuleType(
+    "hypothesis.strategies",
+    "Offline-fallback strategies (subset; see module docstring).")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+st = strategies
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Assumption(Exception):
+    """Raised by `assume(False)` — the example is discarded, not failed."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def note(message) -> None:
+    print(message)
+
+
+class HealthCheck:
+    """Attribute sink: settings(suppress_health_check=[...]) is accepted
+    and ignored (there are no health checks here)."""
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def given(*strats, **kw_strats):
+    assert not kw_strats, "fallback @given supports positional strategies only"
+
+    def decorate(fn):
+        def runner(*fixture_args, **fixture_kwargs):
+            cfg = getattr(runner, "_fallback_settings", {})
+            n = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = _random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            examples = [tuple(s.lo() for s in strats),
+                        tuple(s.hi() for s in strats)]
+            while len(examples) < n:
+                examples.append(tuple(s.draw(rng) for s in strats))
+            for ex in examples[:n]:
+                try:
+                    fn(*fixture_args, *ex, **fixture_kwargs)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): args={ex!r}"
+                    ) from e
+
+        # pytest introspects the signature for fixtures: expose a bare
+        # callable (no __wrapped__ -> no phantom fixture params)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__qualname__ = fn.__qualname__
+        if hasattr(fn, "pytestmark"):
+            runner.pytestmark = fn.pytestmark
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+
+    return decorate
+
+
+def settings(**config):
+    def decorate(fn):
+        fn._fallback_settings = config
+        return fn
+
+    return decorate
+
+
+__version__ = "0.0.0+offline-fallback"

@@ -1,23 +1,51 @@
+import importlib.util
+import os
 import pathlib
 import subprocess
 import sys
 
-import pytest
-
 REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# ---------------------------------------------------------------------------
+# Multi-device host platform for the in-process sharded suite
+# (tests/test_dmf_sharded.py and friends): conftest runs before any test
+# module imports jax, which is early enough — jax binds XLA_FLAGS at first
+# backend init, not import (so importing repro.launch.mesh here is safe).
+# 8 virtual CPU devices; single-device tests are unaffected (everything
+# placed on device 0 by default).
+# ---------------------------------------------------------------------------
+N_TEST_DEVICES = 8
+sys.path.insert(0, str(REPO / "src"))
+from repro.launch.mesh import ensure_host_platform_devices  # noqa: E402
+
+ensure_host_platform_devices(N_TEST_DEVICES)
+
+# ---------------------------------------------------------------------------
+# Property tests without a package index: when the real `hypothesis` is not
+# installed (see tests/requirements.txt), register the offline fallback under
+# its name BEFORE test modules import it, so `pytest.importorskip` finds a
+# working module instead of skipping the 8 property-test files wholesale.
+# ---------------------------------------------------------------------------
+if importlib.util.find_spec("hypothesis") is None:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", pathlib.Path(__file__).with_name("_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
 def run_in_subprocess_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
-    """Run a python snippet with XLA host platform devices (the dry-run-style
-    device-count flag must never be set in THIS process — smoke tests and
-    benches are required to see the real single CPU device)."""
+    """Run a python snippet in a fresh process with exactly ``n_devices``
+    XLA host-platform devices (overriding whatever count this process runs
+    under) — for lowering/executing tests that must control the device
+    count independently of the suite-wide 8-device default above."""
     env = {
         "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
         "PYTHONPATH": str(REPO / "src"),
         "PATH": "/usr/bin:/bin",
         "HOME": "/tmp",
     }
-    import os
     env = {**os.environ, **env}
     res = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,

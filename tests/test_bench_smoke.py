@@ -1,0 +1,140 @@
+"""Benchmark-harness wiring smoke: every `benchmarks.run` section stays
+importable/callable, and the headline BENCH_* artifacts keep their schema
+(keys present, numbers finite, root + benchmarks/results mirror identical) —
+so bench wiring can't silently rot between perf-focused PRs.
+
+The two BENCH_* producers run end-to-end at toy sizes (their ``tiny``
+mode); the remaining sections are checked at the wiring level (module
+imports, `main` callable with the flags run.py passes). Marked ``slow``:
+deselect with -m "not slow".
+"""
+import importlib
+import inspect
+import json
+import math
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# every `--only` section run.py dispatches, with the module it lazily imports
+RUN_SECTIONS = {
+    "paper_tables": "benchmarks.paper_tables",
+    "convergence": "benchmarks.convergence",
+    "reg_sweep": "benchmarks.reg_sweep",
+    "walk_sweep": "benchmarks.walk_sweep",
+    "dmf_train": "benchmarks.dmf_train_bench",
+    "serving": "benchmarks.serving_bench",
+    "complexity": "benchmarks.complexity",
+    "gossip_ablation": "benchmarks.gossip_ablation",
+    "perf_report": "benchmarks.perf_report",
+    "kernels": "benchmarks.kernels_bench",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def _assert_finite(obj, path="$"):
+    """Every numeric leaf in a BENCH_* artifact must be finite."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _assert_finite(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            _assert_finite(v, f"{path}[{i}]")
+    elif isinstance(obj, float):
+        assert math.isfinite(obj), f"non-finite number at {path}: {obj}"
+
+
+@pytest.fixture()
+def bench_outdir(tmp_path, monkeypatch):
+    """Redirect `common.save_json` to a scratch tree so toy-size smoke runs
+    never clobber the committed headline BENCH_* artifacts."""
+    from benchmarks import common
+
+    monkeypatch.setattr(common, "RESULTS", tmp_path / "results")
+    monkeypatch.setattr(common, "ROOT", tmp_path)
+    return tmp_path
+
+
+def _assert_mirrored(name: str, root_dir: pathlib.Path):
+    root = json.loads((root_dir / f"{name}.json").read_text())
+    results = json.loads((root_dir / "results" / f"{name}.json").read_text())
+    assert root == results, f"{name}: root and results mirror diverged"
+    return root
+
+
+def test_run_sections_exist_and_match_dispatcher():
+    """The section names run.py dispatches all resolve to modules with a
+    callable entry point, and this table can't drift from run.py silently."""
+    run_src = (REPO / "benchmarks" / "run.py").read_text()
+    for section, module in RUN_SECTIONS.items():
+        assert f'want("{section}")' in run_src, (
+            f"run.py lost its `{section}` section")
+        mod = importlib.import_module(module)
+        assert callable(getattr(mod, "main", None) or getattr(mod, "render")), module
+    # and no section in run.py that this smoke doesn't know about
+    import re
+    for m in re.findall(r'want\("(\w+)"\)', run_src):
+        assert m in RUN_SECTIONS, f"run.py gained unsmoked section {m!r}"
+
+
+def test_bench_dmf_train_tiny_schema(bench_outdir):
+    from benchmarks import dmf_train_bench
+
+    res = dmf_train_bench.main(tiny=True, n_timed=1, n_check=2)
+    for key in ("config", "epochs_per_sec", "speedup_sparse_vs_dense",
+                "train_loss_max_diff_sparse", "train_loss_max_diff_pallas",
+                "train_losses_dense", "train_losses_sparse", "sharded"):
+        assert key in res, key
+    for path in ("dense_per_batch", "sparse_scan", "sparse_scan_pallas"):
+        assert res["epochs_per_sec"][path] > 0
+    assert res["train_loss_max_diff_sparse"] <= 1e-4
+    sh = res["sharded"]
+    assert set(sh) >= {"config", "epochs_per_sec",
+                       "train_loss_max_diff_vs_sparse"}
+    ran = {k: v for k, v in sh["epochs_per_sec"].items() if v is not None}
+    assert ran, "no sharded entries ran (device provisioning broke)"
+    for k, eps in ran.items():
+        assert eps > 0
+        assert sh["train_loss_max_diff_vs_sparse"][k] <= 1e-5, k
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_dmf_train", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
+def test_bench_serving_tiny_schema(bench_outdir):
+    from benchmarks import serving_bench
+
+    res = serving_bench.main(tiny=True)
+    for key in ("config", "requests_per_sec", "latency_ms",
+                "speedup_pruned_vs_loop",
+                "pruned_dense_topk_agreement_where_in_bucket", "sharded"):
+        assert key in res, key
+    for path in ("loop_per_request", "batched_dense", "batched_pruned"):
+        assert res["requests_per_sec"][path] > 0
+    sh = res["sharded"]
+    ran = {k: v for k, v in sh["requests_per_sec"].items() if v is not None}
+    assert ran, "no sharded serving entries ran"
+    for k, rps in ran.items():
+        assert rps > 0
+        assert sh["exact_match_vs_single_shard"][k] == 1.0, k
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_serving", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
+def test_bench_mains_accept_full_flag():
+    """run.py calls every section main(full=...) (or main() for the
+    flag-less ones) — pin the signatures it relies on."""
+    for section, module in RUN_SECTIONS.items():
+        mod = importlib.import_module(module)
+        fn = getattr(mod, "main", None)
+        if fn is None:
+            continue
+        params = inspect.signature(fn).parameters
+        if section in ("paper_tables", "convergence", "reg_sweep",
+                       "walk_sweep", "dmf_train", "serving", "complexity"):
+            assert "full" in params, f"{module}.main lost full="

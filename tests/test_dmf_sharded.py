@@ -1,0 +1,272 @@
+"""Learner-sharded training/serving == the single-device path, and the
+paper's privacy contract holds at the shard boundary.
+
+Device-count invariance: for any shard count, the SPMD epoch (shard_map +
+all_to_all gradient-message exchange, sharding/dmf.py) must reproduce the
+single-device sparse scan — same loss trajectory, same factors — because
+sharding only redistributes an order-free minibatch sum (DESIGN.md §8).
+
+Privacy invariants (paper: "only gradients ever leave a learner"):
+a learner's ratings, u_i and q^i rows influence no other shard except
+through the global-factor gradient messages, and the outbox content is a
+pure function of those gradients + static graph structure — independent of
+the rating values that produced a given error.
+
+Runs on 8 host-platform devices provisioned by tests/conftest.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.serving import ServingConfig, ServingEngine, index_from_dataset
+from repro.sharding import dmf as sharded_dmf
+
+pytestmark = pytest.mark.sharded
+
+EPOCHS = 5
+
+
+def _world(n_users=80, n_items=50, n_ratings=600, seed=0, walk_length=3):
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=n_users, n_items=n_items, n_ratings=n_ratings, n_cities=4,
+        seed=seed))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=walk_length)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    return ds, nbr
+
+
+def _cfg(ds, mode="dmf", **kw):
+    return dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                         mode=mode, batch_size=64, beta=0.1, gamma=0.01, **kw)
+
+
+_REF_CACHE: dict = {}
+
+
+def _reference(ds, nbr, mode):
+    """Single-device sparse-path fit, shared across the shard-count grid."""
+    if mode not in _REF_CACHE:
+        _REF_CACHE[mode] = dmf.fit(_cfg(ds, mode), ds.train, nbr,
+                                   epochs=EPOCHS, test=ds.test)
+    return _REF_CACHE[mode]
+
+
+def test_partition_reconstructs_table():
+    """Destination-split table sums back to the original: the sharded
+    exchange ships exactly the single-device scatter mass."""
+    ds, nbr = _world()
+    for n_shards in (1, 3, 4, 8):
+        part = graph.partition_neighbor_table(nbr, n_shards, ds.n_users)
+        rows = part.rows_per_shard
+        assert part.idx.shape == (rows * n_shards, n_shards, nbr.idx.shape[1])
+        M_ref = graph.dense_from_neighbor_table(nbr, ds.n_users)
+        M_got = np.zeros_like(M_ref)
+        pidx, pwgt = np.asarray(part.idx), np.asarray(part.wgt)
+        for d in range(n_shards):
+            rcv = d * rows + pidx[: ds.n_users, d]      # back to global rows
+            np.add.at(M_got, (np.repeat(np.arange(ds.n_users), rcv.shape[1]),
+                              rcv.reshape(-1)),
+                      pwgt[: ds.n_users, d].reshape(-1))
+        np.testing.assert_array_equal(M_got, M_ref)
+        # padded sender rows carry no mass
+        assert not np.asarray(part.wgt)[ds.n_users:].any()
+
+
+@pytest.mark.parametrize("mode", ["dmf", "gdmf", "ldmf"])
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+def test_sharded_matches_single_device(mode, n_shards):
+    """Loss trajectory ≤1e-5 over 5 epochs and matching final factors, for
+    every mode × shard count (acceptance contract)."""
+    ds, nbr = _world()
+    ref = _reference(ds, nbr, mode)
+    got = dmf.fit(_cfg(ds, mode, n_shards=n_shards), ds.train, nbr,
+                  epochs=EPOCHS, test=ds.test)
+    np.testing.assert_allclose(ref.train_losses, got.train_losses, atol=1e-5)
+    np.testing.assert_allclose(ref.test_losses, got.test_losses, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.state.U), np.asarray(got.state.U),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.state.P), np.asarray(got.state.P),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.state.Q), np.asarray(got.state.Q),
+                               atol=1e-5)
+    assert np.asarray(got.state.U).shape == (ds.n_users, 6)  # unpadded out
+
+
+def test_sharded_nondivisible_users_padding():
+    """I=77 over 4 shards: the learner axis pads to 80, padded rows are
+    inert, and the result still matches the single-device path."""
+    ds, nbr = _world(n_users=77, n_items=40, n_ratings=500, seed=1)
+    cfg = _cfg(ds)
+    ref = dmf.fit(cfg, ds.train, nbr, epochs=3)
+    got = dmf.fit(_cfg(ds, n_shards=4), ds.train, nbr, epochs=3)
+    np.testing.assert_allclose(ref.train_losses, got.train_losses, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.state.P), np.asarray(got.state.P),
+                               atol=1e-5)
+    assert np.asarray(got.state.U).shape[0] == 77
+
+
+def test_sharded_no_exchange_walk_zero():
+    """D=0 (walk_length=0): the table is self-only, every message routes
+    back to its own shard — still equivalent, still one SPMD dispatch."""
+    ds, nbr = _world(walk_length=0)
+    assert nbr.idx.shape[1] == 1          # self only
+    ref = dmf.fit(_cfg(ds), ds.train, nbr, epochs=3)
+    got = dmf.fit(_cfg(ds, n_shards=4), ds.train, nbr, epochs=3)
+    np.testing.assert_allclose(ref.train_losses, got.train_losses, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.state.P), np.asarray(got.state.P),
+                               atol=1e-5)
+
+
+def test_sharded_evaluate_matches_single_device():
+    ds, nbr = _world()
+    res = _reference(ds, nbr, "dmf")
+    ev1 = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
+    ev8 = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
+                       n_shards=8)
+    assert ev1 == ev8
+
+
+# ---------------------------------------------------------------------------
+# Privacy invariants
+# ---------------------------------------------------------------------------
+def _one_sharded_epoch(state, plan, cfg, batches):
+    ui, vj, r, conf, valid = batches
+    U, P, Q, _ = sharded_dmf._epoch_sharded(
+        state.U, state.P, state.Q,
+        plan.part.idx, plan.part.wgt,
+        jnp.asarray(ui), jnp.asarray(vj), jnp.asarray(r), jnp.asarray(conf),
+        jnp.asarray(valid), cfg, plan.mesh)
+    return np.asarray(U), np.asarray(P), np.asarray(Q)
+
+
+def test_privacy_rating_perturbation_stays_local():
+    """Perturb ONE learner's rating values (same interaction structure) and
+    run a single exchange round: across the whole mesh, U and Q may change
+    only at that learner's own rows (they never leave its shard), and P only
+    at its neighbor-table receivers — i.e. the only cross-shard influence of
+    a rating is the global-factor gradient message, bit-identical everywhere
+    else. (Over MULTIPLE rounds influence spreads further — through the
+    updated global factor, which is the protocol working as designed — so
+    the boundary invariant is per-round.)"""
+    ds, nbr = _world()
+    n_shards = 4
+    cfg = _cfg(ds, n_shards=n_shards)
+    plan = sharded_dmf.make_shard_plan(nbr, cfg)
+    rng = np.random.default_rng(0)
+    ui, vj, r, conf = dmf.sample_epoch(ds.train, cfg, rng)
+    nb = 1                                           # ONE minibatch = one round
+    n = nb * cfg.batch_size
+    shape = (nb, cfg.batch_size)
+    L = int(ui[0])                                   # the perturbed learner
+    r2 = r.copy()
+    r2[ui == L] = 0.37                               # different rating values
+
+    def batches(rr):
+        return sharded_dmf.shard_batches(
+            ui[:n].reshape(shape), vj[:n].reshape(shape),
+            rr[:n].reshape(shape), conf[:n].reshape(shape),
+            n_shards, plan.rows)
+
+    # jit donates U/P/Q: run each world on its own padded copy
+    U1, P1, Q1 = _one_sharded_epoch(
+        sharded_dmf.shard_state(dmf.init_state(cfg), plan), plan, cfg, batches(r))
+    U2, P2, Q2 = _one_sharded_epoch(
+        sharded_dmf.shard_state(dmf.init_state(cfg), plan), plan, cfg, batches(r2))
+
+    receivers = np.asarray(nbr.idx)[L][np.asarray(nbr.wgt)[L] > 0]
+    u_diff = np.nonzero((U1 != U2).any(axis=1))[0]
+    q_diff = np.nonzero((Q1 != Q2).any(axis=(1, 2)))[0]
+    p_diff = np.nonzero((P1 != P2).any(axis=(1, 2)))[0]
+    assert set(u_diff) <= {L}, u_diff                # u_i never leaves learner
+    assert set(q_diff) <= {L}, q_diff                # q^i never leaves learner
+    assert set(p_diff) <= set(receivers), (p_diff, receivers)
+    assert L in receivers                            # sender is its own receiver
+
+
+def test_privacy_outbox_pure_function_of_gradient():
+    """The cross-shard payload is built by `build_outbox(gp, tables, vj)` —
+    no ratings, confidences, u or q in its signature — and equal errors
+    produce a bit-identical outbox whatever rating values caused them
+    (zero-init item factors make pred=0 exact, so err = conf·r exactly)."""
+    ds, nbr = _world()
+    cfg = _cfg(ds)
+    part = graph.partition_neighbor_table(nbr, 4, ds.n_users)
+    rng = np.random.default_rng(3)
+    B, K = 32, cfg.dim
+    u = jnp.asarray(rng.normal(size=(B, K)), jnp.float32)
+    p = jnp.zeros((B, K), jnp.float32)
+    q = jnp.zeros((B, K), jnp.float32)
+    users = jnp.asarray(rng.integers(0, ds.n_users, B), jnp.int32)
+    vj = jnp.asarray(rng.integers(0, ds.n_items, B), jnp.int32)
+    # two different rating worlds with identical errors: err = conf * r
+    r1, c1 = jnp.full((B,), 1.0), jnp.full((B,), 0.25)
+    r2, c2 = jnp.full((B,), 0.25), jnp.full((B,), 1.0)
+    _, gp1, _, _ = dmf._grads_and_loss(u, p, q, r1, c1, cfg)
+    _, gp2, _, _ = dmf._grads_and_loss(u, p, q, r2, c2, cfg)
+    np.testing.assert_array_equal(np.asarray(gp1), np.asarray(gp2))
+
+    tbl_i, tbl_w = part.idx[users], part.wgt[users]
+    box1 = sharded_dmf.build_outbox(gp1, tbl_i, tbl_w, vj)
+    box2 = sharded_dmf.build_outbox(gp2, tbl_i, tbl_w, vj)
+    for a, b in zip(box1, box2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # fixed-shape contract: (D, B, S) weights/rows, (D, B, K) grads, (D, B) items
+    D, S = 4, nbr.idx.shape[1]
+    assert [tuple(x.shape) for x in box1] == [
+        (D, B, S), (D, B, S), (D, B, K), (D, B)]
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving
+# ---------------------------------------------------------------------------
+@pytest.mark.serving
+@pytest.mark.parametrize("prune", [True, False])
+def test_sharded_engine_matches_single_shard(prune):
+    """One SPMD serve dispatch per mesh-wide microbatch, bit-identical
+    recommendations (values AND item ids) to the single-shard engine,
+    results aligned to request order."""
+    ds, nbr = _world(n_users=90, n_items=70, n_ratings=800)
+    cfg = _cfg(ds)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=6)
+    index = index_from_dataset(ds)
+    users = np.random.default_rng(0).integers(0, ds.n_users, 150)
+    e1 = ServingEngine(res.state, index,
+                       ServingConfig(microbatch=16, k=5, prune=prune),
+                       train=ds.train)
+    v1, i1 = e1.recommend(users)
+    e8 = ServingEngine(res.state, index,
+                       ServingConfig(microbatch=16, k=5, prune=prune,
+                                     n_shards=8),
+                       train=ds.train)
+    v8, i8 = e8.recommend(users)
+    np.testing.assert_array_equal(i1, i8)
+    np.testing.assert_allclose(v1, v8, rtol=1e-6, atol=1e-7)
+    # 150 requests over 8 queues of cap 16 -> 2 SPMD dispatches, not 10
+    assert e8.stats.n_dispatches < e1.stats.n_dispatches
+    assert e8.stats.n_requests == len(users)
+
+
+@pytest.mark.serving
+def test_sharded_engine_ingest_stays_in_sync():
+    ds, nbr = _world(n_users=90, n_items=70, n_ratings=800)
+    cfg = _cfg(ds)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=4)
+    index = index_from_dataset(ds)
+    rng = np.random.default_rng(1)
+    users = rng.integers(0, ds.n_users, 96)
+    events = np.stack([rng.integers(0, ds.n_users, 20),
+                       rng.integers(0, ds.n_items, 20)], 1)
+    engines = [
+        ServingEngine(res.state, index, ServingConfig(microbatch=16, k=5,
+                                                      n_shards=s),
+                      train=ds.train, nbr=nbr, dmf_cfg=cfg)
+        for s in (1, 4)]
+    for e in engines:
+        e.ingest(events)
+    (v1, i1), (v4, i4) = (e.recommend(users) for e in engines)
+    np.testing.assert_array_equal(i1, i4)
+    np.testing.assert_allclose(v1, v4, rtol=1e-6, atol=1e-7)

@@ -69,7 +69,12 @@ def test_serve_ws_shardings_resident():
     """SERVE_WS_OVERRIDES: no data axis on embed dims; expert_ff -> data."""
     from jax.sharding import AbstractMesh, PartitionSpec as P
     from repro.sharding import rules
-    mesh = AbstractMesh((2, 4), ("data", "model"))
+    # AbstractMesh wants ((name, size), ...) pairs on jax 0.4.x; newer jax
+    # accepts (sizes, names) — same shim as tests/test_sharding.py
+    try:
+        mesh = AbstractMesh((("data", 2), ("model", 4)))
+    except TypeError:
+        mesh = AbstractMesh((2, 4), ("data", "model"))
     spec = rules.resolve_spec(("experts", "embed", "expert_ff"), (8, 64, 32),
                               mesh, overrides=rules.SERVE_WS_OVERRIDES)
     assert spec == P("model", None, "data")
