@@ -1,9 +1,13 @@
 """Fig. 4: training/test loss vs. maximum iteration T — DMF converges
-steadily (paper: ~100 epochs on Foursquare, ~200 on Alipay)."""
+steadily (paper: ~100 epochs on Foursquare, ~200 on Alipay).
+
+Writes ``BENCH_convergence.json`` (repo root + benchmarks/results mirror,
+the `common.save_json` BENCH_* convention)."""
 from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from repro.core import dmf, graph
 from repro.data import synthetic_poi
 
@@ -33,6 +37,7 @@ def main(full: bool = False, epochs: int = 120):
                 < max(0.15 * np.mean(tr[-20:-10]), 1e-3)
             ),
         }
+    common.save_json("BENCH_convergence", out)   # mirrors to repo root
     return out
 
 

@@ -1,18 +1,28 @@
 """Beyond-paper ablation: gossip (DMF protocol) vs centralized all-reduce on
 a small LM — loss parity and consensus, quantified (EXPERIMENTS.md §Perf-B
 semantics note). Runs in a subprocess with 8 host devices so the harness
-itself keeps seeing the single real CPU device."""
+itself keeps seeing the single real CPU device.
+
+Writes ``BENCH_gossip_ablation.json`` (repo root + benchmarks/results
+mirror, the `common.save_json` BENCH_* convention). The subprocess hands
+its result back through a temp FILE, not stdout — the snippet previously
+ended in a stray module-scope json print, making the whole bench depend
+on stdout's last line staying clean (any library chatter broke the
+parse)."""
 from __future__ import annotations
 
 import json
 import pathlib
 import subprocess
 import sys
+import tempfile
+
+from benchmarks import common
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 CODE = """
-import json
+import json, sys
 import jax, jax.numpy as jnp
 from repro.configs import registry
 from repro.core import gossip as gossip_lib
@@ -41,7 +51,8 @@ for name, sync, D in [("allreduce", "allreduce", 0), ("gossip_d1", "gossip", 1),
             cons = round(float(m["consensus_err"]), 4)
     out[name] = {"first": losses[0], "last": losses[-1],
                  "curve10": losses[::5], "consensus_err": cons}
-print(json.dumps(out))
+with open(sys.argv[1], "w") as f:
+    json.dump(out, f)
 """
 
 
@@ -50,13 +61,20 @@ def main(steps: int = 50):
     env = {**os.environ,
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
            "PYTHONPATH": str(REPO / "src")}
-    res = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
-                         text=True, timeout=2400, env=env)
-    if res.returncode != 0:
-        return {"error": res.stderr[-1500:]}
-    data = json.loads(res.stdout.strip().splitlines()[-1])
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        out_path = pathlib.Path(tmp.name)
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", CODE, str(out_path)], capture_output=True,
+            text=True, timeout=2400, env=env)
+        if res.returncode != 0:
+            return {"error": res.stderr[-1500:]}
+        data = json.loads(out_path.read_text())
+    finally:
+        out_path.unlink(missing_ok=True)
     gap = data["gossip_d1"]["last"] - data["allreduce"]["last"]
     data["gossip_minus_allreduce_final_loss"] = round(gap, 4)
+    common.save_json("BENCH_gossip_ablation", data)  # mirrors to repo root
     return data
 
 

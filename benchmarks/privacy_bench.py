@@ -1,0 +1,142 @@
+"""Privacy benchmark: the ε-utility frontier, the DP-path throughput
+overhead, and the empirical leakage-audit curves (ISSUE 5 tentpole).
+
+Three questions, answered on the synthetic Foursquare config:
+
+1. **ε vs utility** — train across a noise-multiplier grid (DP off plus
+   ascending σ at fixed clip), record the accountant's ε(δ) against
+   P@k/R@k: the frontier a deployment picks its operating point on.
+2. **Throughput overhead** — epochs/sec of the DP path (fused Pallas
+   clip+noise on the exchange hot path) vs the un-noised sparse scan.
+   Contract: ≤15% overhead with the fused kernel.
+3. **Leakage audit** — `privacy.audit` attack advantage (rating
+   reconstruction + membership inference) against the observed outbox
+   stream per grid point: advantage must fall as ε falls.
+
+Writes ``BENCH_privacy.json`` (repo root + benchmarks/results mirror):
+
+    PYTHONPATH=src python -m benchmarks.run --only privacy
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+
+# DP off first, then ascending σ at fixed clip: ε strictly falls along the
+# grid, so monotonicity of the utility/advantage columns is readable off
+# the arrays directly. Clip/σ chosen so the absolute noise std σ·C stays
+# ≤ 1 — beyond that the un-damped u·v feedback loop diverges the tiny and
+# reduced-Foursquare configs to NaN (measured), which is a training-regime
+# statement, not a frontier point.
+SIGMA_GRID = (0.0, 0.25, 1.0, 4.0)
+CLIP = 0.25
+DELTA = 1e-5
+
+
+def _time_epochs(cfg, train, nbr, n_timed: int, repeats: int = 3) -> float:
+    """Best-of-``repeats`` epochs/sec: this container's CPU shares are
+    throttled erratically (single-shot timings swing ±2x), and the
+    overhead ratio of two single-shot numbers can even go negative; the
+    min-time rep per config is the stable estimator."""
+    rng = np.random.default_rng(123)
+    state = dmf.init_state(cfg)
+    state, _ = dmf.train_epoch(state, nbr, train, cfg, rng)   # warm/compile
+    jax.block_until_ready(state.U)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n_timed):
+            state, _ = dmf.train_epoch(state, nbr, train, cfg, rng)
+        jax.block_until_ready(state.U)
+        best = min(best, time.perf_counter() - t0)
+    return n_timed / best
+
+
+def main(full: bool = False, tiny: bool = False, n_timed: int = 3,
+         epochs: int | None = None, audit_epochs: int = 1) -> dict:
+    if tiny:
+        ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+            n_users=192, n_items=96, n_ratings=1200, n_cities=4))
+        epochs = epochs or 6
+    else:
+        ds = synthetic_poi.foursquare_like(reduced=not full)
+        epochs = epochs or (60 if full else 30)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+
+    def make_cfg(sigma: float, use_pallas: bool = False) -> dmf.DMFConfig:
+        return dmf.DMFConfig(
+            n_users=ds.n_users, n_items=ds.n_items, dim=10, beta=0.1,
+            gamma=0.01, dp_sigma=sigma,
+            dp_clip=CLIP if sigma > 0 else float("inf"),
+            use_pallas=use_pallas)
+
+    from repro.privacy import audit
+
+    frontier = []
+    for sigma in SIGMA_GRID:
+        cfg = make_cfg(sigma)
+        res = dmf.fit(cfg, ds.train, nbr, epochs=epochs, test=ds.test,
+                      dp_delta=DELTA)
+        ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items)
+        row = {
+            "dp_sigma": sigma,
+            "dp_clip": None if sigma == 0 else CLIP,
+            "eps": (None if res.privacy is None
+                    else res.privacy["eps_max"]),
+            "eps_median_active": (None if res.privacy is None
+                                  else res.privacy["eps_median_active"]),
+            "train_loss_final": float(res.train_losses[-1]),
+            "test_loss_final": float(res.test_losses[-1]),
+            **{k: float(v) for k, v in ev.items()},
+        }
+        row.update(audit.run_audit(
+            cfg, ds.train, nbr, ds.n_users, ds.n_items, epochs=audit_epochs))
+        frontier.append(row)
+
+    adv = [r["rating_inversion_advantage"] for r in frontier]
+    mem = [r["membership_advantage"] for r in frontier]
+
+    # DP-path epoch throughput: un-noised scan vs DP via jnp vs DP via the
+    # fused Pallas kernel (overhead contract is on the fused path)
+    eps_plain = _time_epochs(make_cfg(0.0), ds.train, nbr, n_timed)
+    eps_dp_jnp = _time_epochs(make_cfg(1.0), ds.train, nbr, n_timed)
+    eps_dp_fused = _time_epochs(make_cfg(1.0, use_pallas=True), ds.train, nbr,
+                                n_timed)
+    base_fused = _time_epochs(make_cfg(0.0, use_pallas=True), ds.train, nbr,
+                              n_timed)
+
+    res = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items, "dim": 10,
+            "n_train": int(len(ds.train)), "epochs": epochs,
+            "delta": DELTA, "clip": CLIP, "sigma_grid": list(SIGMA_GRID),
+            "audit_epochs": audit_epochs,
+        },
+        "frontier": frontier,
+        "attack_advantage_monotone_nonincreasing": bool(
+            all(a2 <= a1 + 0.05 for a1, a2 in zip(adv, adv[1:]))
+            and all(a2 <= a1 + 0.05 for a1, a2 in zip(mem, mem[1:]))),
+        "epochs_per_sec": {
+            "sparse_scan": eps_plain,
+            "dp_jnp": eps_dp_jnp,
+            "dp_fused_pallas": eps_dp_fused,
+            "sparse_scan_pallas": base_fused,
+        },
+        "dp_overhead_fused_vs_pallas_base": base_fused / eps_dp_fused - 1.0,
+        "dp_overhead_jnp_vs_base": eps_plain / eps_dp_jnp - 1.0,
+    }
+    common.save_json("BENCH_privacy", res)   # mirrors to repo root
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

@@ -14,15 +14,39 @@ import argparse
 import sys
 import time
 
+# every section this harness dispatches — `--only` takes a comma-separated
+# subset (whitespace tolerated) and rejects unknown names instead of
+# silently running nothing
+SECTIONS = (
+    "paper_tables", "convergence", "reg_sweep", "walk_sweep", "dmf_train",
+    "serving", "privacy", "complexity", "gossip_ablation", "perf_report",
+    "kernels", "roofline",
+)
+
 
 def _section(name):
     print(f"# --- {name} " + "-" * max(0, 60 - len(name)), flush=True)
 
 
+def parse_only(spec: str) -> set | None:
+    """``--only a, b`` -> {'a', 'b'}; empty/None -> run everything."""
+    if not spec:
+        return None
+    only = {s.strip() for s in spec.split(",") if s.strip()}
+    unknown = only - set(SECTIONS)
+    if unknown:
+        raise SystemExit(
+            f"--only: unknown section(s) {sorted(unknown)}; "
+            f"choose from {', '.join(SECTIONS)}")
+    return only
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section list "
+                         f"({', '.join(SECTIONS)}); default: all")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host-platform devices (the dmf_train/"
                          "serving `sharded` sections need 8; 0 = leave the "
@@ -36,7 +60,7 @@ def main() -> None:
         from repro.launch.mesh import ensure_host_platform_devices
 
         ensure_host_platform_devices(args.devices)
-    only = set(args.only.split(",")) if args.only else None
+    only = parse_only(args.only)
 
     from benchmarks import common
 
@@ -65,9 +89,8 @@ def main() -> None:
         from benchmarks import convergence
         _section("convergence (Fig. 4)")
         t0 = time.perf_counter()
-        res = convergence.main(full=args.full)
+        res = convergence.main(full=args.full)   # saves BENCH_convergence itself
         us = (time.perf_counter() - t0) * 1e6
-        common.save_json("convergence", res)
         for ds, r in res.items():
             print(
                 f"convergence_{ds},{us:.0f},converged={r['converged']};"
@@ -90,9 +113,8 @@ def main() -> None:
         from benchmarks import walk_sweep
         _section("walk_sweep (Fig. 6)")
         t0 = time.perf_counter()
-        res = walk_sweep.main(full=args.full)
+        res = walk_sweep.main(full=args.full)    # saves BENCH_walk_sweep itself
         us = (time.perf_counter() - t0) * 1e6
-        common.save_json("walk_sweep", res)
         for ds, r in res.items():
             print(
                 f"walk_sweep_{ds},{us:.0f},"
@@ -149,6 +171,24 @@ def main() -> None:
             f"{rps_sh or 'all_skipped'}"
         )
 
+    if want("privacy"):
+        from benchmarks import privacy_bench
+        _section("privacy (DP exchange: eps-utility frontier + audit)")
+        t0 = time.perf_counter()
+        res = privacy_bench.main(full=args.full)   # saves BENCH_privacy itself
+        us = (time.perf_counter() - t0) * 1e6
+        fr = res["frontier"]
+        pts = ";".join(
+            f"eps={'inf' if r['eps'] is None else round(r['eps'], 2)}:"
+            f"P@10={r['P@10']:.4f}:adv={r['rating_inversion_advantage']:.3f}"
+            for r in fr)
+        print(
+            f"privacy,{us:.0f},{pts};"
+            f"monotone={res['attack_advantage_monotone_nonincreasing']};"
+            f"dp_overhead_fused="
+            f"{res['dp_overhead_fused_vs_pallas_base']:.3f}"
+        )
+
     if want("complexity"):
         from benchmarks import complexity
         _section("complexity (paper §Complexity)")
@@ -165,9 +205,8 @@ def main() -> None:
         from benchmarks import gossip_ablation
         _section("gossip_ablation (beyond-paper: DMF sync at LM scale)")
         t0 = time.perf_counter()
-        res = gossip_ablation.main()
+        res = gossip_ablation.main()     # saves BENCH_gossip_ablation itself
         us = (time.perf_counter() - t0) * 1e6
-        common.save_json("gossip_ablation", res)
         if "error" in res:
             print(f"gossip_ablation,{us:.0f},ERROR")
         else:

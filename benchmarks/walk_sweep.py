@@ -2,11 +2,15 @@
 
 Paper claim: quality rises with D and is roughly stable for D ≥ 3 (small D
 already suffices -> low communication cost).
+
+Writes ``BENCH_walk_sweep.json`` (repo root + benchmarks/results mirror,
+the `common.save_json` BENCH_* convention).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from repro.core import dmf, graph
 from repro.data import synthetic_poi
 
@@ -40,6 +44,7 @@ def main(full: bool = False, epochs: int = 60, seeds=(0, 1, 2)):
                 abs(curve[4] - curve[3]) <= 0.15 * max(curve[3], 1e-9)
             ),
         }
+    common.save_json("BENCH_walk_sweep", out)    # mirrors to repo root
     return out
 
 

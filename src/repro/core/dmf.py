@@ -69,10 +69,32 @@ class DMFConfig:
     pallas_interpret: bool = True    # interpret=True on CPU; False on real TPU
     n_shards: int = 1                # learner-mesh width; >1 = SPMD epochs over
                                      # a row-sharded U/P/Q (sharding/dmf.py)
+    dp_clip: float = float("inf")    # C — L2 bound per outgoing gradient message
+    dp_sigma: float = 0.0            # σ — noise multiplier relative to C
+    dp_seed: int = 0                 # DP mechanism base seed (privacy/mechanism.py)
 
     def __post_init__(self):
         assert self.mode in ("dmf", "gdmf", "ldmf"), self.mode
         assert self.n_shards >= 1, self.n_shards
+        assert self.dp_sigma >= 0.0 and self.dp_clip > 0.0, (
+            self.dp_sigma, self.dp_clip)
+        import math
+        assert self.dp_sigma == 0.0 or math.isfinite(self.dp_clip), (
+            "dp_sigma > 0 needs a finite dp_clip: the noise std is σ·C")
+
+    @property
+    def dp(self) -> bool:
+        """True iff outgoing gradient messages are clipped/noised
+        (privacy/mechanism.py). False (the default σ=0, C=∞) compiles the
+        exact un-noised program — bit-exact with the DP-less paths. Also
+        False for ``ldmf``: purely-local learning exchanges nothing, so
+        there is no mechanism to run, no rng seed draw, and no accountant
+        — dp params are inert rather than producing an ε claim about
+        releases that never happen."""
+        if self.mode == "ldmf":
+            return False
+        from repro.privacy import mechanism
+        return mechanism.dp_enabled(self)
 
 
 @dataclasses.dataclass
@@ -188,17 +210,84 @@ def _step_deltas(U, P, Q, ui, vj, r, conf, cfg: DMFConfig, valid=None):
     return du, gp, dq, loss
 
 
-def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
-                         valid=None):
+def _dp_noise_rows(rid, dp_seed, cfg: DMFConfig, k: int):
+    """On-demand noise for a row set: the (len(rid), k) pre-scaled σC
+    Gaussian block from the counter stream keyed by the rows' global
+    stream ids — what the online refresh and the audit capture use per
+    batch. The epoch scan instead generates the WHOLE epoch's block in one
+    vectorized pass (see `_epoch_scan`) — same stream, same values, 70x
+    fewer transcendental dispatches. Returns None when σ=0 (clip-only)."""
+    from repro.kernels.dp_noise import gauss_counter
+    from repro.privacy import mechanism
+    std = mechanism.noise_std(cfg)
+    if std == 0.0:
+        return None
+    return std * gauss_counter(
+        dp_seed, jnp.asarray(rid, jnp.int32).reshape(-1, 1), k)
+
+
+def _dp_message(gp, noise, cfg: DMFConfig, valid=None):
+    """The DP mechanism's clip+noise over the outgoing message block — THE
+    single place a P-gradient becomes an exchanged message on the jnp
+    paths (the fused Pallas step applies the identical math in-kernel, and
+    the sharded step runs this pre-`all_to_all`). ``noise`` is the rows'
+    pre-scaled σC block (None = clip only); padded rows are re-masked
+    because noise lands on their zero gradients too."""
+    nrm = jnp.sqrt(jnp.sum(gp * gp, axis=-1, keepdims=True))
+    gp = gp * jnp.minimum(1.0, cfg.dp_clip / nrm)   # inf/0 -> 1 (no-op)
+    if noise is not None:
+        gp = gp + noise
+    if valid is not None:
+        gp = gp * valid.astype(gp.dtype)[:, None]
+    return gp
+
+
+def _step_deltas_dp(U, P, Q, ui, vj, r, conf, cfg: DMFConfig, valid, noise):
+    """`_step_deltas` with the DP mechanism on the outgoing gp message.
+
+    On the Pallas path the clip + noise-add folds into the SAME fused step
+    kernel (`ops.dmf_fused_step_dp`) — the DP epoch keeps the un-noised
+    epoch's one-kernel-per-minibatch dispatch count. The jnp path applies
+    `_dp_message` as a follow-on op (XLA fuses it into the step anyway)."""
+    if cfg.use_pallas:
+        from repro.kernels import ops
+        z = noise if noise is not None else jnp.zeros_like(U[ui])
+        du, gp, dq, loss = ops.dmf_fused_step_dp(
+            U[ui], P[ui, vj], Q[ui, vj], r, conf, z,
+            theta=cfg.lr, alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
+            clip=cfg.dp_clip, interpret=cfg.pallas_interpret)
+        if valid is not None:
+            keep = valid.astype(du.dtype)[:, None]
+            du, gp, dq = du * keep, gp * keep, dq * keep
+        return du, gp, dq, loss
+    du, gp, dq, loss = _step_deltas(U, P, Q, ui, vj, r, conf, cfg, valid)
+    return du, _dp_message(gp, noise, cfg, valid), dq, loss
+
+
+def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
+                                  cfg: DMFConfig, valid=None, rid=None,
+                                  dp_seed=None, noise=None):
     """One minibatch of Alg. 1 against the sparse neighbor table.
 
     Identical math to `_batch_step`; only the line 13-15 propagation differs:
     instead of weighting gp by a full (I,) column of M, each sender's (S,)
     receiver row is gathered and scatter-added — padded self-index slots
     carry weight 0 and are exact no-ops.
+
+    With DP on (``cfg.dp``), the propagated message is clipped+noised
+    before the scatter — every receiver, the sender's own line-11 P update
+    included, applies only the noised message. Returns the per-row sent
+    messages too (the observed outbox stream the audit harness attacks);
+    `_sparse_batch_update` drops them for the training callers.
     """
     theta = cfg.lr
-    du, gp, dq, loss = _step_deltas(U, P, Q, ui, vj, r, conf, cfg, valid)
+    if cfg.dp and cfg.mode != "ldmf":
+        if noise is None:
+            noise = _dp_noise_rows(rid, dp_seed, cfg, U.shape[-1])
+        du, gp, dq, loss = _step_deltas_dp(
+            U, P, Q, ui, vj, r, conf, cfg, valid, noise)
+    else:
+        du, gp, dq, loss = _step_deltas(U, P, Q, ui, vj, r, conf, cfg, valid)
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
@@ -209,6 +298,14 @@ def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFCon
         wb = nbr_wgt[ui]                           # (B, S) walk weights
         upd = wb[:, :, None] * gp[:, None, :]      # (B, S, K)
         P = P.at[nb, vj[:, None]].add(-theta * upd)
+    return U, P, Q, loss, gp
+
+
+def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
+                         valid=None, rid=None, dp_seed=None, noise=None):
+    U, P, Q, loss, _ = _sparse_batch_update_messages(
+        U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg, valid, rid, dp_seed,
+        noise)
     return U, P, Q, loss
 
 
@@ -223,21 +320,44 @@ def _epoch_scan(
     vj: jnp.ndarray,
     r: jnp.ndarray,
     conf: jnp.ndarray,
+    dp_seed: jnp.ndarray,      # () int32 per-epoch mechanism seed (traced)
     cfg: DMFConfig,
 ):
     """A full epoch as one device-resident `lax.scan` over minibatches —
     one dispatch per epoch instead of a Python loop with a host sync
-    (`float(loss)`) per batch. Returns stacked per-batch losses."""
+    (`float(loss)`) per batch. Returns stacked per-batch losses.
+
+    DP (``cfg.dp``): the epoch's ENTIRE noise block is drawn here in one
+    vectorized pass over the counter stream — row b·B+k of the stream gets
+    `gauss_counter(dp_seed, b·B+k, :)` — and streamed into the scan per
+    batch, where the step applies clip + add fused. Per-batch in-step
+    generation would pay the log/cos dispatch cost n_batches times for the
+    same bits (measured ~50% epoch overhead on CPU vs ~1 noise-gen ms
+    amortized). With DP off (the default) `dp_seed` is a dead input XLA
+    prunes and the compiled epoch is the exact PR 1 program."""
+    nb, B = ui.shape
+    from repro.privacy import mechanism
+    noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
+    if noise_on:
+        from repro.kernels.dp_noise import gauss_counter
+        K = U.shape[-1]
+        rid = jnp.arange(nb * B, dtype=jnp.int32).reshape(-1, 1)
+        Z = (mechanism.noise_std(cfg)
+             * gauss_counter(dp_seed, rid, K)).reshape(nb, B, K)
+        xs = (ui, vj, r, conf, Z)
+    else:
+        xs = (ui, vj, r, conf)
 
     def body(carry, batch):
         U, P, Q = carry
-        b_ui, b_vj, b_r, b_conf = batch
+        b_ui, b_vj, b_r, b_conf = batch[:4]
         U, P, Q, loss = _sparse_batch_update(
-            U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg
+            U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg,
+            noise=batch[4] if noise_on else None,
         )
         return (U, P, Q), loss
 
-    (U, P, Q), losses = jax.lax.scan(body, (U, P, Q), (ui, vj, r, conf))
+    (U, P, Q), losses = jax.lax.scan(body, (U, P, Q), xs)
     return U, P, Q, losses
 
 
@@ -304,12 +424,25 @@ def _as_neighbor_table(prop) -> graph_lib.NeighborTable:
     return graph_lib.neighbor_table_from_dense(np.asarray(prop))
 
 
+def epoch_dp_inputs(cfg: DMFConfig, rng: np.random.Generator, n: int):
+    """Per-epoch DP mechanism inputs for an n-row stream: the rows' global
+    stream ids (the shard-count-invariant noise keys) and the fresh
+    per-epoch seed. DP off: zeros, and — crucially — NO rng draw, so the
+    un-noised paths' rng stream stays bit-exact."""
+    rid = np.arange(n, dtype=np.int32)
+    if not cfg.dp:
+        return rid, 0
+    from repro.privacy import mechanism
+    return rid, mechanism.epoch_noise_seed(rng, cfg)
+
+
 def train_epoch(
     state: DMFState,
     prop,                       # graph.NeighborTable, or dense (I, I) M
     train: np.ndarray,
     cfg: DMFConfig,
     rng: np.random.Generator,
+    accountant=None,
 ) -> tuple[DMFState, float]:
     """Sparse-neighborhood scan epoch: one jitted dispatch for the whole
     epoch, O(B·S·K) propagation per batch. Passing a dense M converts it
@@ -319,22 +452,31 @@ def train_epoch(
     stream, rows routed to each user's home shard, one SPMD dispatch over
     the ``learners`` mesh (sharding/dmf.py). The returned state's learner
     axis stays padded+sharded between epochs; `fit` unpads at the end, or
-    call `sharding.dmf.unpad_state` yourself."""
+    call `sharding.dmf.unpad_state` yourself.
+
+    ``accountant`` (a `privacy.GaussianAccountant`) observes the epoch's
+    realized minibatch stream for per-learner ε(δ) tracking when DP is on.
+    """
     if cfg.n_shards > 1:
         from repro.sharding import dmf as sharded_dmf
-        return sharded_dmf.train_epoch_sharded(state, prop, train, cfg, rng)
+        return sharded_dmf.train_epoch_sharded(
+            state, prop, train, cfg, rng, accountant=accountant)
     nbr = _as_neighbor_table(prop)
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
     nb = len(ui) // B
     n = nb * B
     shape = (nb, B)
+    _, dp_seed = epoch_dp_inputs(cfg, rng, n)
+    if accountant is not None:
+        accountant.observe_epoch(ui[:n].reshape(shape))
     U, P, Q, losses = _epoch_scan(
         state.U, state.P, state.Q, nbr.idx, nbr.wgt,
         jnp.asarray(ui[:n].reshape(shape)),
         jnp.asarray(vj[:n].reshape(shape)),
         jnp.asarray(r[:n].reshape(shape)),
         jnp.asarray(conf[:n].reshape(shape)),
+        jnp.asarray(dp_seed, jnp.int32),
         cfg,
     )
     total = float(np.asarray(losses, dtype=np.float64).sum())
@@ -361,6 +503,7 @@ class FitResult:
     state: DMFState
     train_losses: list
     test_losses: list
+    privacy: dict | None = None   # accountant summary when cfg.dp (ε(δ) etc.)
 
 
 def fit(
@@ -372,17 +515,28 @@ def fit(
     callback: Callable | None = None,
     seed: int | None = None,
     dense_reference: bool = False,
+    dp_delta: float = 1e-5,
 ) -> FitResult:
     """Train `epochs` epochs of Alg. 1. `M` may be a dense (I, I) propagation
     matrix or a `graph.NeighborTable`; the sparse scan path is the default,
-    `dense_reference=True` forces the seed dense per-batch loop (oracle)."""
+    `dense_reference=True` forces the seed dense per-batch loop (oracle).
+
+    With DP on (``cfg.dp_sigma > 0``) a `privacy.GaussianAccountant`
+    observes every epoch's realized minibatch stream; its per-learner
+    ε(``dp_delta``) summary lands in `FitResult.privacy`."""
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     state = init_state(cfg, rng)
+    accountant = None
+    if cfg.dp and cfg.dp_sigma > 0.0:   # ldmf: no releases, no ε claim
+        from repro.privacy import GaussianAccountant
+        accountant = GaussianAccountant(
+            n_users=cfg.n_users, sigma=cfg.dp_sigma, delta=dp_delta)
     if dense_reference:
         assert not isinstance(M, graph_lib.NeighborTable), (
             "dense_reference needs the dense M"
         )
         assert cfg.n_shards == 1, "dense_reference is the single-device oracle"
+        assert not cfg.dp, "dense_reference is the un-noised oracle path"
         prop = jnp.asarray(M)
         epoch_fn = train_epoch_dense
     elif cfg.n_shards > 1:
@@ -394,7 +548,11 @@ def fit(
         epoch_fn = train_epoch
     tr_losses, te_losses = [], []
     for t in range(epochs):
-        state, l = epoch_fn(state, prop, train, cfg, rng)
+        if epoch_fn is train_epoch_dense:
+            state, l = epoch_fn(state, prop, train, cfg, rng)
+        else:
+            state, l = epoch_fn(state, prop, train, cfg, rng,
+                                accountant=accountant)
         tr_losses.append(l)
         if test is not None:
             te_losses.append(test_loss(state, test))
@@ -403,7 +561,8 @@ def fit(
     if cfg.n_shards > 1 and not dense_reference:
         from repro.sharding import dmf as sharded_dmf
         state = sharded_dmf.unpad_state(state, cfg.n_users)
-    return FitResult(state, tr_losses, te_losses)
+    return FitResult(state, tr_losses, te_losses,
+                     privacy=accountant.summary() if accountant else None)
 
 
 def evaluate(

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dmf_update, gossip_mix, topk_scores
+from repro.kernels import dmf_update, dp_noise, gossip_mix, topk_scores
 from repro.kernels import serve_topk as serve_topk_lib
 
 LANE = 128
@@ -71,6 +71,60 @@ def dmf_fused_step(u, p, q, r, conf, *, theta: float, alpha: float, beta: float,
         block_b=block_b, interpret=interpret,
     )
     return du[:B, :K], gp[:B, :K], dq[:B, :K], loss[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "alpha", "beta", "gamma",
+                                             "clip", "interpret"))
+def dmf_fused_step_dp(u, p, q, r, conf, z, *, theta: float, alpha: float,
+                      beta: float, gamma: float, clip: float,
+                      interpret: bool = True):
+    """`dmf_fused_step` with the DP mechanism folded into the SAME kernel
+    pass: the returned gp message is already clipped to ``clip`` and
+    perturbed with ``z`` — the batch's pre-scaled σC noise block from the
+    counter-keyed stream (generated once per epoch, see core/dmf.py). The
+    DP training hot path keeps the un-noised path's dispatch count — one
+    fused kernel per minibatch."""
+    B, K = u.shape
+    block_b = 256 if B % 256 == 0 else (B if B <= 256 else None)
+    if block_b is None:
+        # padded rows carry conf=0 + zero factors + zero noise:
+        # grads/deltas/loss are 0 and the clip scale is 1
+        u, p, q, z = (_pad_to(x, 256, 0) for x in (u, p, q, z))
+        r = _pad_to(r, 256, 0)
+        conf = _pad_to(conf, 256, 0)
+        block_b = 256
+    uP, pP, qP, zP = (_pad_to(x, LANE, 1) for x in (u, p, q, z))
+    du, gp, dq, loss = dmf_update.dmf_fused_step_dp_kernel_call(
+        uP, pP, qP, r, conf, zP, theta=theta, alpha=alpha, beta=beta,
+        gamma=gamma, clip=clip, block_b=block_b, interpret=interpret,
+    )
+    return du[:B, :K], gp[:B, :K], dq[:B, :K], loss[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "noise_std", "interpret"))
+def dp_clip_noise(g, rid, seed, *, clip: float, noise_std: float,
+                  interpret: bool = True):
+    """Fused DP mechanism for gradient messages: per-row L2 clip to
+    ``clip`` + additive N(0, noise_std²) counter-keyed Gaussian noise, one
+    kernel pass (kernels/dp_noise.py). g: (B, K) f32; rid: (B,) int32
+    global message-row ids; seed: int32 scalar (traced — changing the
+    per-epoch seed does not recompile). ``clip=inf`` scales by exactly 1.0
+    and ``noise_std=0`` compiles the noise path out entirely, so the
+    disabled mechanism is bit-exact identity."""
+    B, K = g.shape
+    block_b = 256 if B % 256 == 0 else (B if B <= 256 else None)
+    if block_b is None:
+        # padded rows carry g=0 (clip scale 1) and their noise is sliced off
+        g = _pad_to(g, 256, 0)
+        rid = _pad_to(rid, 256, 0)
+        block_b = 256
+    gP = _pad_to(g, LANE, 1)      # zero K-pad: row norms unchanged
+    seed2 = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    out = dp_noise.dp_clip_noise_kernel_call(
+        gP, rid.astype(jnp.int32), seed2, clip=clip, noise_std=noise_std,
+        n_real=K, block_b=block_b, interpret=interpret,
+    )
+    return out[:B, :K]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -68,6 +68,26 @@ def serve_topk_ref(U, V, cand, seen, k):
     return masked_topk_finalize(vals, idx)
 
 
+def dp_clip_noise_ref(g, rid, seed, clip, noise_std):
+    """DP gradient-message mechanism oracle: per-row L2 clip to ``clip``
+    then additive N(0, noise_std²) noise.
+
+    g: (B, K) f32; rid: (B,) int32 global message-row ids; seed: int32.
+    The noise stream itself is spec'd as `dp_noise.gauss_counter` — a pure
+    function of (seed, rid, column) — so the oracle draws the *identical*
+    perturbation the fused kernel applies (the mechanism is deterministic
+    by design; only the clip-norm reduction is re-derived independently).
+    """
+    from repro.kernels.dp_noise import gauss_counter
+
+    B, K = g.shape
+    nrm = jnp.sqrt(jnp.sum(g * g, axis=-1, keepdims=True))
+    out = g * jnp.minimum(1.0, clip / nrm)
+    if noise_std > 0.0:
+        out = out + noise_std * gauss_counter(seed, rid.reshape(B, 1), K)
+    return out
+
+
 def gossip_mix_ref(M, X):
     """Propagation mixing: (I, I) walk matrix times flattened learner state
     (I, F) — Alg. 1 line 15 vectorized over receivers."""

@@ -7,6 +7,14 @@ Learner-sharded SPMD training (one dispatch per epoch across an N-device
 ``learners`` mesh; on a CPU host the devices are provisioned automatically):
 
     PYTHONPATH=src python -m repro.launch.dmf_train --n-shards 8 --epochs 20
+
+Differentially-private gradient exchange (src/repro/privacy/): clip+noise
+every outgoing P-gradient message, with Rényi-DP ε(δ) accounting — either
+set the mechanism directly or give a target ε and let the launcher solve
+for the noise multiplier σ:
+
+    PYTHONPATH=src python -m repro.launch.dmf_train --dp-sigma 1.0 --dp-clip 0.5
+    PYTHONPATH=src python -m repro.launch.dmf_train --dp-epsilon 2.0 --epochs 40
 """
 from __future__ import annotations
 
@@ -56,6 +64,20 @@ def main():
     ap.add_argument("--n-shards", type=int, default=1,
                     help="learner-mesh width: >1 trains/evaluates SPMD over "
                          "row-sharded U/P/Q (host devices auto-provisioned)")
+    ap.add_argument("--dp-clip", type=float, default=float("inf"),
+                    help="C: L2 clip per outgoing gradient message "
+                         "(inf = off; --dp-sigma/--dp-epsilon need it finite)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="σ: Gaussian noise multiplier relative to the clip "
+                         "(0 = off; the DP-off path is bit-exact un-noised)")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="target ε(δ): solve for the σ meeting it over this "
+                         "run's epochs/batching (overrides --dp-sigma; "
+                         "defaults --dp-clip to 1.0 if unset)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5)
+    ap.add_argument("--dp-seed", type=int, default=0,
+                    help="DP mechanism base seed (per-epoch noise streams "
+                         "are folded from it)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     _ensure_host_devices(args.n_shards)
@@ -76,11 +98,38 @@ def main():
         prop = graph.walk_propagation_matrix(W, gcfg)
     else:
         prop = graph.walk_neighbor_table(W, gcfg)
+
+    import dataclasses as _dc
+
+    import numpy as np
+    dp_clip, dp_sigma = args.dp_clip, args.dp_sigma
+    if args.dp_epsilon > 0:
+        # ε-target mode: solve for the noise multiplier meeting ε(δ) over
+        # this run's realized batching, at the busiest learner's rate and
+        # its expected rows-per-participating-batch (accountant semantics)
+        from repro.privacy import sigma_for_epsilon
+        if not np.isfinite(dp_clip):
+            dp_clip = 1.0
+        m1 = 1 + args.neg_samples
+        B = next(f.default for f in _dc.fields(dmf.DMFConfig)
+                 if f.name == "batch_size")
+        nb = max(len(ds.train) * m1 // B, 1)
+        rows = np.bincount(ds.train[:, 0], minlength=ds.n_users) * m1
+        q_max = float(1.0 - (1.0 - 1.0 / nb) ** rows.max())
+        kbar = max(1.0, float(rows.max()) / max(nb * q_max, 1e-9))
+        dp_sigma = sigma_for_epsilon(
+            args.dp_epsilon, q=q_max, steps=args.epochs * nb,
+            delta=args.dp_delta, rows_per_step=kbar)
+        print(f"dp target eps={args.dp_epsilon} delta={args.dp_delta}: "
+              f"solved sigma={dp_sigma:.4f} (clip={dp_clip}, q_max={q_max:.4f}, "
+              f"steps={args.epochs * nb}, rows_per_step={kbar:.2f})")
+
     cfg = dmf.DMFConfig(
         n_users=ds.n_users, n_items=ds.n_items, dim=args.dim, mode=args.mode,
         alpha=args.alpha, beta=args.beta, gamma=args.gamma, lr=args.lr,
         neg_samples=args.neg_samples, seed=args.seed,
         use_pallas=args.use_pallas, n_shards=args.n_shards,
+        dp_clip=dp_clip, dp_sigma=dp_sigma, dp_seed=args.dp_seed,
     )
     comm = graph.communication_bytes(
         W, D=args.walk_length, K=args.dim, n_ratings=len(ds.train))
@@ -95,9 +144,14 @@ def main():
             print(f"epoch {t:4d} train_loss {loss:.5f}")
 
     res = dmf.fit(cfg, ds.train, prop, epochs=args.epochs, test=ds.test,
-                  callback=cb, dense_reference=args.dense_reference)
+                  callback=cb, dense_reference=args.dense_reference,
+                  dp_delta=args.dp_delta)
     ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
                       n_shards=args.n_shards)
+    if res.privacy is not None:
+        pv = dict(res.privacy)
+        pv.pop("eps_trajectory", None)
+        print("privacy " + json.dumps(pv))
     print(json.dumps({k: round(v, 4) for k, v in ev.items()}))
 
 

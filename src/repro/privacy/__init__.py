@@ -1,0 +1,35 @@
+"""Differentially-private gradient exchange for DMF.
+
+The paper's privacy argument is structural: only derived gradients of the
+global item factor ever leave a learner (Alg. 1 lines 13-15). This package
+hardens and *measures* that channel:
+
+  * `mechanism`  — per-message L2 clip + Gaussian noise applied to every
+                   propagated P-gradient before it reaches any receiver
+                   (folded into the fused step kernel on the Pallas hot
+                   path — `ops.dmf_fused_step_dp`; standalone fused op:
+                   `ops.dp_clip_noise`);
+  * `accountant` — Rényi-DP accounting for the subsampled Gaussian
+                   mechanism, per-learner ε(δ) from realized minibatch
+                   participation, plus the σ-for-ε solver;
+  * `audit`      — empirical leakage harness: gradient-inversion rating
+                   reconstruction and membership inference run against the
+                   observed outbox stream, reported as attack advantage.
+
+Wiring: `DMFConfig(dp_clip=…, dp_sigma=…, dp_seed=…)` turns the mechanism
+on for the sparse scan epoch, the learner-sharded SPMD epoch (noise added
+*before* the `all_to_all`), and the serving-engine online refresh. With
+``dp_sigma=0`` and ``dp_clip=inf`` every path is bit-exact with the
+un-noised code (DESIGN.md §9).
+"""
+from repro.privacy.accountant import (  # noqa: F401
+    GaussianAccountant,
+    rdp_subsampled_gaussian,
+    rdp_to_epsilon,
+    sigma_for_epsilon,
+)
+from repro.privacy.mechanism import (  # noqa: F401
+    dp_enabled,
+    epoch_noise_seed,
+    noise_std,
+)

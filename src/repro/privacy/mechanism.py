@@ -1,0 +1,67 @@
+"""The DP mechanism on the gradient-exchange channel: config surface and
+seed/std conventions. The clip+noise math itself lives where it executes —
+`core/dmf._dp_message` (jnp epoch paths, pre-scatter/pre-`all_to_all`),
+the fused step kernel `ops.dmf_fused_step_dp` (Pallas path), and the
+standalone fused op `ops.dp_clip_noise` / `ref.dp_clip_noise_ref` (the
+self-contained mechanism kernel + its oracle) — all drawing the ONE
+counter-keyed stream defined by `kernels/dp_noise.gauss_counter`.
+
+What leaves a learner in Alg. 1 is the global-factor gradient message
+∂L/∂p^i_j. Following "Practical Privacy Preserving POI Recommendation"
+(Chen et al.), the mechanism makes that message differentially private at
+the *sender*, before any routing:
+
+    g̃ = g · min(1, C / ‖g‖₂)  +  N(0, (σC)² I)                 (local DP)
+
+Receivers — the sender's own line-11 update included — only ever apply the
+noised message, so an honest-but-curious neighbor (or shard) observes a
+(C, σ)-Gaussian-mechanism release per message and nothing else. The noise
+is keyed by ``(seed, global stream row id, column)`` through a counter
+PRNG (kernels/dp_noise.py): deterministic given the per-epoch seed, hence
+shard-count-invariant — the sharded path perturbs with bit-identical noise
+to the single-device scan for the same epoch stream.
+
+Config surface (core/dmf.DMFConfig):
+  * ``dp_clip``  — C, the per-message L2 bound (inf = no clipping);
+  * ``dp_sigma`` — σ, the noise multiplier *relative to C* (0 = no noise);
+  * ``dp_seed``  — the mechanism's base seed, folded with a fresh
+                   per-epoch draw so noise never repeats across epochs.
+
+Disabled (σ=0 ∧ C=∞) the mechanism is skipped entirely — the compiled
+epoch is the identical un-noised program, bit-exact with PRs 1-3.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_GOLDEN = 0x9E3779B9
+_U32 = 1 << 32
+
+
+def dp_enabled(cfg) -> bool:
+    """True iff the config requests any DP processing of the messages."""
+    return cfg.dp_sigma > 0.0 or math.isfinite(cfg.dp_clip)
+
+
+def noise_std(cfg) -> float:
+    """Absolute noise std σ·C (0 when σ=0; σ>0 requires finite C —
+    enforced by DMFConfig.__post_init__)."""
+    if cfg.dp_sigma <= 0.0:
+        return 0.0
+    return cfg.dp_sigma * cfg.dp_clip
+
+
+def epoch_noise_seed(rng: np.random.Generator, cfg) -> int:
+    """Per-epoch mechanism seed: a fresh rng draw folded with ``dp_seed``.
+
+    Drawn AFTER the epoch's minibatch sampling (both the single-device and
+    the sharded epoch do sample-then-draw in that order, so their rng
+    streams — and therefore their noise — stay identical). Noise re-used
+    across epochs would cancel in update differences and leak; the fresh
+    draw guarantees a new stream every epoch. DP-off epochs never call
+    this, leaving the rng stream bit-exact with the un-noised paths.
+    """
+    draw = int(rng.integers(0, 2**31 - 1))
+    return int((cfg.dp_seed * _GOLDEN + draw) % _U32) & 0x7FFFFFFF

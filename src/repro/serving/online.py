@@ -22,6 +22,12 @@ so every refresh reuses one compiled step; padded rows carry conf=0 and
 valid=0 and contribute exactly nothing (see `_sparse_batch_update`). The
 U/P/Q buffers are donated to the step — refresh is in-place at the XLA
 level, no copy of the (I, J, K) factors per event batch.
+
+DP (``cfg.dp``): the refresh runs the same privacy/mechanism.py clip+noise
+pass over each outgoing gradient message as training — the online channel
+is not a side door around the mechanism. Each `online_refresh` call draws
+one fresh mechanism seed from its rng (DP off: no draw, stream unchanged)
+and keys noise by the row's position in the refresh stream.
 """
 from __future__ import annotations
 
@@ -53,20 +59,24 @@ class RefreshReport:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
-def _refresh_step(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, valid, cfg):
+def _refresh_step(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, valid, rid,
+                  dp_seed, cfg):
     return dmf._sparse_batch_update(
-        U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg, valid=valid
+        U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg, valid=valid,
+        rid=rid, dp_seed=dp_seed,
     )
 
 
 def _event_batches(events: np.ndarray, cfg: dmf.DMFConfig, ocfg: OnlineConfig,
-                   rng: np.random.Generator):
+                   rng: np.random.Generator, rid_offset: int = 0):
     """Pack check-ins + per-event negatives into fixed-shape (cap,) batches.
 
     Negatives are freshly sampled unobserved items with confidence 1/m via
     the training-time `dmf.sample_with_negatives` (same objective by
     construction) — without them a refresh would only push scores up and
-    drift the ranking calibration."""
+    drift the ranking calibration. ``rid_offset`` shifts the rows' DP
+    noise-key ids so successive local passes over the same events never
+    reuse a noise draw."""
     ui, vj, r, conf = dmf.sample_with_negatives(
         events, cfg.n_items, ocfg.neg_samples, rng)
 
@@ -82,6 +92,7 @@ def _event_batches(events: np.ndarray, cfg: dmf.DMFConfig, ocfg: OnlineConfig,
             jnp.asarray(np.pad(r[sl], (0, pad)).astype(np.float32)),
             jnp.asarray(np.pad(conf[sl], (0, pad)).astype(np.float32)),
             jnp.asarray((np.arange(cap) < b).astype(np.float32)),
+            jnp.asarray(rid_offset + s + np.arange(cap, dtype=np.int32)),
         )
 
 
@@ -119,16 +130,34 @@ def online_refresh(
     if len(events) == 0:
         return state, RefreshReport(
             np.empty(0, np.int64), np.empty(0, np.int64), [], 0, 0)
+    if cfg.dp and rng is None:
+        # the fallback rng is freshly seeded from cfg.seed EVERY call: under
+        # DP that would re-derive the same noise seed per refresh window,
+        # and repeated noise cancels in update differences — the exact leak
+        # the mechanism exists to prevent. A persistent stream is required
+        # (ServingEngine.ingest holds one; pass your own otherwise).
+        raise ValueError(
+            "online_refresh with DP on needs an explicit persistent rng — "
+            "the default would reuse the same noise stream every call")
     rng = rng or np.random.default_rng(cfg.seed)
     affected, touched = touched_from_events(events, nbr)
+
+    dp_seed = 0
+    if cfg.dp:
+        from repro.privacy import mechanism
+        dp_seed = mechanism.epoch_noise_seed(rng, cfg)
+    dp_seed_j = jnp.asarray(dp_seed, jnp.int32)
+    stream_len = len(events) * (1 + ocfg.neg_samples)
 
     U, P, Q = state.U, state.P, state.Q
     losses = []
     n_batches = 0
-    for _ in range(ocfg.steps):
-        for ui, vj, r, conf, valid in _event_batches(events, cfg, ocfg, rng):
+    for step in range(ocfg.steps):
+        for ui, vj, r, conf, valid, rid in _event_batches(
+                events, cfg, ocfg, rng, rid_offset=step * stream_len):
             U, P, Q, loss = _refresh_step(
-                U, P, Q, nbr.idx, nbr.wgt, ui, vj, r, conf, valid, cfg)
+                U, P, Q, nbr.idx, nbr.wgt, ui, vj, r, conf, valid, rid,
+                dp_seed_j, cfg)
             losses.append(float(loss))
             n_batches += 1
     report = RefreshReport(

@@ -142,13 +142,18 @@ def shard_batches(
 ):
     """Route (nb, B) minibatch rows to their user's home shard.
 
-    Returns (ui_local, vj, r, conf, valid), each (nb, n_shards, Bs) with
-    Bs = max realized per-(batch, shard) row count rounded up to
+    Returns (ui_local, vj, r, conf, valid, rid), each (nb, n_shards, Bs)
+    with Bs = max realized per-(batch, shard) row count rounded up to
     ``cap_multiple`` (a stable dispatch shape across epochs: the rounded max
     rarely moves, so the jitted epoch recompiles at most once or twice per
     run). Padded slots carry ui=0, conf=0, valid=0 — exact no-ops in the
     step. Row order inside a shard group preserves batch order, so
     n_shards=1 reproduces the single-device batch stream bit-for-bit.
+
+    ``rid`` carries each routed row's GLOBAL stream position (batch·B +
+    slot in the unsharded stream) — the DP mechanism keys its counter
+    noise by it, which is what makes the noised sharded epoch invariant to
+    the shard count (kernels/dp_noise.py).
     """
     nb, B = ui.shape
     shard = ui // rows                              # (nb, B)
@@ -173,7 +178,8 @@ def shard_batches(
     r_s = route(r.astype(np.float32))
     conf_s = route(conf.astype(np.float32))
     valid = (np.arange(Bs)[None, None, :] < counts[:, :, None]).astype(np.float32)
-    return ui_l, vj_s, r_s, conf_s, valid
+    rid = route(np.arange(nb * B, dtype=np.int32).reshape(nb, B))
+    return ui_l, vj_s, r_s, conf_s, valid, rid
 
 
 # ---------------------------------------------------------------------------
@@ -203,15 +209,30 @@ def build_outbox(gp, tbl_idx, tbl_wgt, vj):
     return out_w, out_i, out_g, out_v
 
 
-def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid,
+def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
                           cfg: dmf_lib.DMFConfig):
     """One minibatch of Alg. 1 on one shard: local gathers + Eq. 9-11 via
     the SAME `dmf._step_deltas` as the single-device paths (the equivalence
     suite leans on that), local U/Q scatters, and the cross-shard P-gradient
-    exchange."""
+    exchange.
+
+    Noise-before-routing (DESIGN.md §9): with DP on, the clip+noise
+    mechanism runs on ``gp`` HERE — before `build_outbox` and the
+    `all_to_all` — so what crosses the shard boundary is already the
+    noised message; no shard ever holds a peer's raw gradient. ``noise``
+    is the batch rows' pre-scaled σC block, gathered from the epoch's
+    counter-stream draw by each row's GLOBAL stream id — bit-identical to
+    what the single-device scan adds, whatever shard the row landed on.
+    The PR 3 privacy invariant (outbox = pure function of the message +
+    static tables) is preserved with ``gp`` simply replaced by its DP
+    release."""
     theta = cfg.lr
-    du, gp, dq, loss = dmf_lib._step_deltas(
-        U, P, Q, ui, vj, r, conf, cfg, valid)
+    if cfg.dp and cfg.mode != "ldmf":
+        du, gp, dq, loss = dmf_lib._step_deltas_dp(
+            U, P, Q, ui, vj, r, conf, cfg, valid, noise)
+    else:
+        du, gp, dq, loss = dmf_lib._step_deltas(
+            U, P, Q, ui, vj, r, conf, cfg, valid)
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
@@ -230,34 +251,53 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid,
 
 @functools.partial(
     jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(0, 1, 2))
-def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, cfg, mesh):
+def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
+                   cfg, mesh):
     """A full epoch as ONE SPMD dispatch: shard_map over the learner axis,
     `lax.scan` over minibatches inside. Inputs: U (I_pad, K), P/Q
-    (I_pad, J, K), tables (I_pad, D, S), batches (nb, D, Bs). Returns the
-    updated factors and per-(batch, shard) losses (nb, D)."""
+    (I_pad, J, K), tables (I_pad, D, S), batches (nb, D, Bs), plus the
+    routed global stream ids ``rid`` (nb, D, Bs) and the per-epoch traced
+    ``dp_seed`` keying the DP noise (dead inputs when DP is off). With DP
+    noise on, every shard draws the SAME full-epoch noise block from the
+    counter stream (one vectorized pass, replicated compute — noise is
+    (n, K), small next to P) and gathers its routed rows' slices by rid:
+    bit-identical noise to the single-device scan for every row, any mesh
+    width. Returns the updated factors and per-(batch, shard) losses
+    (nb, D)."""
+    from repro.privacy import mechanism
+    noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
 
-    def shard_body(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid):
-        ui, vj, r, conf, valid = (x[:, 0] for x in (ui, vj, r, conf, valid))
+    def shard_body(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed):
+        ui, vj, r, conf, valid, rid = (
+            x[:, 0] for x in (ui, vj, r, conf, valid, rid))
+        if noise_on:
+            from repro.kernels.dp_noise import gauss_counter
+            nb = ui.shape[0]
+            K = U.shape[-1]
+            all_rid = jnp.arange(
+                nb * cfg.batch_size, dtype=jnp.int32).reshape(-1, 1)
+            Z = mechanism.noise_std(cfg) * gauss_counter(dp_seed, all_rid, K)
 
         def body(carry, batch):
             U, P, Q = carry
-            b_ui, b_vj, b_r, b_conf, b_val = batch
+            b_ui, b_vj, b_r, b_conf, b_val, b_rid = batch
             U, P, Q, loss = _sharded_batch_update(
-                U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val, cfg)
+                U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
+                Z[b_rid] if noise_on else None, cfg)
             return (U, P, Q), loss
 
         (U, P, Q), losses = jax.lax.scan(
-            body, (U, P, Q), (ui, vj, r, conf, valid))
+            body, (U, P, Q), (ui, vj, r, conf, valid, rid))
         return U, P, Q, losses[:, None]
 
     return shard_map(
         shard_body, mesh=mesh,
         in_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS),
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
-                  P_(None, AXIS), P_(None, AXIS)),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS), P_()),
         out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS)),
         check_vma=False,
-    )(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid)
+    )(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed)
 
 
 def _as_plan(prop, cfg: dmf_lib.DMFConfig) -> ShardPlan:
@@ -287,19 +327,26 @@ def train_epoch_sharded(
     train: np.ndarray,
     cfg: dmf_lib.DMFConfig,
     rng: np.random.Generator,
+    accountant=None,
 ) -> tuple[dmf_lib.DMFState, float]:
     """Sharded counterpart of `dmf.train_epoch`: identical minibatch stream
-    (same rng consumption), rows routed to home shards, one SPMD dispatch.
-    Returns a state whose learner axis stays padded+sharded across epochs
-    (donated buffers, no per-epoch host round-trip); slice with
-    `unpad_state` when done — `dmf.fit` does both automatically."""
+    (same rng consumption — the per-epoch DP seed draw included, so DP-on
+    noise matches the single-device epoch bit-for-bit), rows routed to home
+    shards, one SPMD dispatch. Returns a state whose learner axis stays
+    padded+sharded across epochs (donated buffers, no per-epoch host
+    round-trip); slice with `unpad_state` when done — `dmf.fit` does both
+    automatically. ``accountant`` observes the realized stream like the
+    single-device path (ε accounting is shard-count-independent)."""
     plan = _as_plan(prop, cfg)
     ui, vj, r, conf = dmf_lib.sample_epoch(train, cfg, rng)
     B = cfg.batch_size
     nb = len(ui) // B
     n = nb * B
     shape = (nb, B)
-    ui_l, vj_s, r_s, conf_s, valid = shard_batches(
+    _, dp_seed = dmf_lib.epoch_dp_inputs(cfg, rng, n)
+    if accountant is not None:
+        accountant.observe_epoch(ui[:n].reshape(shape))
+    ui_l, vj_s, r_s, conf_s, valid, rid = shard_batches(
         ui[:n].reshape(shape), vj[:n].reshape(shape),
         r[:n].reshape(shape), conf[:n].reshape(shape),
         cfg.n_shards, plan.rows)
@@ -307,7 +354,8 @@ def train_epoch_sharded(
     U, Pm, Q, losses = _epoch_sharded(
         st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
         jnp.asarray(ui_l), jnp.asarray(vj_s), jnp.asarray(r_s),
-        jnp.asarray(conf_s), jnp.asarray(valid), cfg, plan.mesh)
+        jnp.asarray(conf_s), jnp.asarray(valid), jnp.asarray(rid),
+        jnp.asarray(dp_seed, jnp.int32), cfg, plan.mesh)
     total = float(np.asarray(losses, dtype=np.float64).sum())
     return dmf_lib.DMFState(U, Pm, Q), total / max(n, 1)
 

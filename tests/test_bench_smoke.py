@@ -28,6 +28,7 @@ RUN_SECTIONS = {
     "walk_sweep": "benchmarks.walk_sweep",
     "dmf_train": "benchmarks.dmf_train_bench",
     "serving": "benchmarks.serving_bench",
+    "privacy": "benchmarks.privacy_bench",
     "complexity": "benchmarks.complexity",
     "gossip_ablation": "benchmarks.gossip_ablation",
     "perf_report": "benchmarks.perf_report",
@@ -126,6 +127,61 @@ def test_bench_serving_tiny_schema(bench_outdir):
         json.dumps(res, default=float))
 
 
+def test_bench_privacy_tiny_schema(bench_outdir):
+    from benchmarks import privacy_bench
+
+    res = privacy_bench.main(tiny=True, n_timed=1)
+    for key in ("config", "frontier", "epochs_per_sec",
+                "attack_advantage_monotone_nonincreasing",
+                "dp_overhead_fused_vs_pallas_base", "dp_overhead_jnp_vs_base"):
+        assert key in res, key
+    fr = res["frontier"]
+    assert fr[0]["dp_sigma"] == 0 and fr[0]["eps"] is None   # DP-off anchor
+    eps_vals = [r["eps"] for r in fr[1:]]
+    assert all(e > 0 for e in eps_vals)
+    assert eps_vals == sorted(eps_vals, reverse=True)        # σ up ⇒ ε down
+    for r in fr:
+        for m in ("P@5", "R@10", "rating_inversion_advantage",
+                  "membership_advantage", "n_messages"):
+            assert m in r, m
+    # the acceptance direction: attack advantage falls as ε falls
+    assert res["attack_advantage_monotone_nonincreasing"]
+    adv = [r["rating_inversion_advantage"] for r in fr]
+    assert adv[0] > 0.5 and adv[-1] < adv[0] - 0.3
+    for k in ("sparse_scan", "dp_jnp", "dp_fused_pallas",
+              "sparse_scan_pallas"):
+        assert res["epochs_per_sec"][k] > 0
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_privacy", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
+def test_run_only_parsing_validates_sections():
+    from benchmarks import run as run_mod
+
+    assert run_mod.parse_only("") is None
+    assert run_mod.parse_only(" privacy , kernels ") == {"privacy", "kernels"}
+    assert set(RUN_SECTIONS) == set(run_mod.SECTIONS)
+    with pytest.raises(SystemExit):
+        run_mod.parse_only("privacy,nope")
+
+
+def test_legacy_benches_save_bench_artifacts():
+    """Satellite contract: the migrated legacy sections own their BENCH_*
+    save (root + results mirror via common.save_json) instead of run.py
+    side-saving unmirrored names."""
+    for mod in ("convergence", "walk_sweep", "gossip_ablation"):
+        src = (REPO / "benchmarks" / f"{mod}.py").read_text()
+        assert f'common.save_json("BENCH_{mod}"' in src, mod
+    run_src = (REPO / "benchmarks" / "run.py").read_text()
+    for legacy in ('save_json("convergence"', 'save_json("walk_sweep"',
+                   'save_json("gossip_ablation"'):
+        assert legacy not in run_src
+    # the gossip subprocess hands results back via file, not stdout parsing
+    gossip_src = (REPO / "benchmarks" / "gossip_ablation.py").read_text()
+    assert "print(json.dumps(out))" not in gossip_src
+
+
 def test_bench_mains_accept_full_flag():
     """run.py calls every section main(full=...) (or main() for the
     flag-less ones) — pin the signatures it relies on."""
@@ -136,5 +192,6 @@ def test_bench_mains_accept_full_flag():
             continue
         params = inspect.signature(fn).parameters
         if section in ("paper_tables", "convergence", "reg_sweep",
-                       "walk_sweep", "dmf_train", "serving", "complexity"):
+                       "walk_sweep", "dmf_train", "serving", "privacy",
+                       "complexity"):
             assert "full" in params, f"{module}.main lost full="

@@ -133,13 +133,14 @@ def test_sharded_evaluate_matches_single_device():
 # ---------------------------------------------------------------------------
 # Privacy invariants
 # ---------------------------------------------------------------------------
-def _one_sharded_epoch(state, plan, cfg, batches):
-    ui, vj, r, conf, valid = batches
+def _one_sharded_epoch(state, plan, cfg, batches, dp_seed=0):
+    ui, vj, r, conf, valid, rid = batches
     U, P, Q, _ = sharded_dmf._epoch_sharded(
         state.U, state.P, state.Q,
         plan.part.idx, plan.part.wgt,
         jnp.asarray(ui), jnp.asarray(vj), jnp.asarray(r), jnp.asarray(conf),
-        jnp.asarray(valid), cfg, plan.mesh)
+        jnp.asarray(valid), jnp.asarray(rid), jnp.asarray(dp_seed, jnp.int32),
+        cfg, plan.mesh)
     return np.asarray(U), np.asarray(P), np.asarray(Q)
 
 

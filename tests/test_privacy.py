@@ -1,0 +1,320 @@
+"""DP gradient-exchange subsystem (src/repro/privacy/): mechanism
+equivalence (Pallas kernel == jnp oracle, disabled == bit-exact identity),
+DP-off bit-exactness with the PR 1-3 training paths, DP-on shard-count
+invariance of the counter-keyed noise, RDP accountant sanity, and the
+leakage audit's noise-kills-the-attack direction."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.kernels import ops, ref
+from repro.kernels.dp_noise import gauss_counter
+from repro.privacy import (
+    GaussianAccountant,
+    audit,
+    mechanism,
+    rdp_subsampled_gaussian,
+    rdp_to_epsilon,
+    sigma_for_epsilon,
+)
+
+pytestmark = pytest.mark.privacy
+
+INF = float("inf")
+
+
+def _world(n_users=80, n_items=50, n_ratings=600, seed=0):
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=n_users, n_items=n_items, n_ratings=n_ratings, n_cities=4,
+        seed=seed))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    return ds, graph.walk_neighbor_table(W, gcfg)
+
+
+def _cfg(ds, **kw):
+    return dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                         batch_size=64, beta=0.1, gamma=0.01, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mechanism: fused kernel vs oracle, identity, clipping, noise stream
+# ---------------------------------------------------------------------------
+def test_disabled_mechanism_is_bitexact_identity():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(192, 10)), jnp.float32)
+    rid = jnp.arange(192, dtype=jnp.int32)
+    out = ops.dp_clip_noise(g, rid, 7, clip=INF, noise_std=0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+    out_ref = ref.dp_clip_noise_ref(g, rid, 7, INF, 0.0)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(g))
+
+
+@pytest.mark.parametrize("B", [256, 300, 64])   # 300: pad-to-256-multiple path
+@pytest.mark.parametrize("clip,std", [(1.0, 0.0), (0.5, 0.7), (INF, 0.3)])
+def test_kernel_matches_oracle(B, clip, std):
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(B, 10)), jnp.float32)
+    rid = jnp.asarray(rng.integers(0, 10_000, B), jnp.int32)
+    got = np.asarray(ops.dp_clip_noise(g, rid, 42, clip=clip, noise_std=std))
+    want = np.asarray(ref.dp_clip_noise_ref(g, rid, 42, clip, std))
+    # noise stream is bit-identical by construction; the clip-norm reduction
+    # may differ by padding-dependent reduce order only
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_clip_bounds_row_norms():
+    g = jnp.asarray(np.random.default_rng(2).normal(size=(128, 8)) * 5,
+                    jnp.float32)
+    rid = jnp.arange(128, dtype=jnp.int32)
+    out = np.asarray(ops.dp_clip_noise(g, rid, 0, clip=0.5, noise_std=0.0))
+    assert np.linalg.norm(out, axis=1).max() <= 0.5 * (1 + 1e-5)
+    # rows already under the bound pass through bit-exactly
+    small = np.linalg.norm(np.asarray(g), axis=1) <= 0.5
+    if small.any():
+        np.testing.assert_array_equal(out[small], np.asarray(g)[small])
+
+
+def test_counter_noise_deterministic_and_seeded():
+    rid = jnp.arange(4096, dtype=jnp.int32).reshape(-1, 1)
+    z1 = np.asarray(gauss_counter(7, rid, 16))
+    z2 = np.asarray(gauss_counter(7, rid, 16))
+    z3 = np.asarray(gauss_counter(8, rid, 16))
+    np.testing.assert_array_equal(z1, z2)
+    assert (z1 != z3).mean() > 0.99
+    # moments of a 65k-draw standard normal
+    assert abs(z1.mean()) < 0.02 and abs(z1.std() - 1.0) < 0.02
+    # disjoint rid ranges draw disjoint streams
+    z4 = np.asarray(gauss_counter(7, rid + 4096, 16))
+    assert (z1 != z4).mean() > 0.99
+    # rows 2^23 apart must NOT recycle draws: the 512-counter block uses
+    # the low 23 rid bits, the high bits fold into the per-row stream key
+    # (a wrapped uint32 counter would reuse noise, which cancels in update
+    # differences and leaks at the millions-of-rows epoch scale)
+    z5 = np.asarray(gauss_counter(7, rid + (1 << 23), 16))
+    assert (z1 != z5).mean() > 0.99
+
+
+def test_ldmf_dp_params_are_inert():
+    """ldmf exchanges nothing, so there is no mechanism to run and no ε
+    claim to make: dp params must not change the trajectory (no seed
+    draws), and FitResult.privacy stays None instead of reporting a
+    guarantee about releases that never happened."""
+    ds, nbr = _world(n_users=60, n_items=40, n_ratings=400, seed=1)
+    plain = dmf.fit(_cfg(ds, mode="ldmf"), ds.train, nbr, epochs=3)
+    dp = dmf.fit(_cfg(ds, mode="ldmf", dp_sigma=1.0, dp_clip=0.5),
+                 ds.train, nbr, epochs=3)
+    assert dp.train_losses == plain.train_losses
+    assert dp.privacy is None
+    assert not dmf.DMFConfig(n_users=4, n_items=4, mode="ldmf",
+                             dp_sigma=1.0, dp_clip=0.5).dp
+
+
+
+# ---------------------------------------------------------------------------
+# Training-path wiring: DP-off bit-exact, DP-on shard-invariant
+# ---------------------------------------------------------------------------
+def test_dp_off_bitexact_with_existing_paths():
+    """σ=0 ∧ clip=∞ IS the default config — the compiled epoch is the
+    identical program, so losses and factors match bit-for-bit on the
+    sparse path and every shard count (acceptance contract)."""
+    ds, nbr = _world()
+    ref_fit = dmf.fit(_cfg(ds), ds.train, nbr, epochs=5, test=ds.test)
+    for n_shards in (1, 2, 4, 8):
+        got = dmf.fit(_cfg(ds, dp_sigma=0.0, dp_clip=INF, n_shards=n_shards),
+                      ds.train, nbr, epochs=5, test=ds.test)
+        base = dmf.fit(_cfg(ds, n_shards=n_shards), ds.train, nbr, epochs=5,
+                       test=ds.test)
+        assert got.train_losses == base.train_losses, n_shards
+        assert got.test_losses == base.test_losses, n_shards
+        np.testing.assert_array_equal(np.asarray(got.state.P),
+                                      np.asarray(base.state.P))
+        assert got.privacy is None
+    # and the single-device DP-off run == the plain reference bitwise
+    got1 = dmf.fit(_cfg(ds, dp_sigma=0.0, dp_clip=INF), ds.train, nbr,
+                   epochs=5, test=ds.test)
+    assert got1.train_losses == ref_fit.train_losses
+
+
+@pytest.mark.sharded
+def test_dp_on_shard_count_invariant():
+    """Counter-keyed noise (kernels/dp_noise.py): the noised sharded epoch
+    reproduces the noised single-device epoch for every shard count —
+    same seeds => same noise, wherever a row is routed."""
+    ds, nbr = _world()
+    cfg = _cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=3)
+    ref_fit = dmf.fit(cfg, ds.train, nbr, epochs=5, test=ds.test)
+    assert ref_fit.privacy is not None and ref_fit.privacy["eps_max"] > 0
+    for n_shards in (2, 4, 8):
+        got = dmf.fit(dataclasses.replace(cfg, n_shards=n_shards),
+                      ds.train, nbr, epochs=5, test=ds.test)
+        np.testing.assert_allclose(ref_fit.train_losses, got.train_losses,
+                                   atol=1e-7)
+        np.testing.assert_allclose(np.asarray(ref_fit.state.P),
+                                   np.asarray(got.state.P), atol=1e-5)
+        # accounting is shard-count-independent (same realized stream)
+        assert got.privacy["eps_max"] == pytest.approx(
+            ref_fit.privacy["eps_max"])
+
+
+def test_dp_on_changes_trajectory_and_is_seeded():
+    ds, nbr = _world()
+    plain = dmf.fit(_cfg(ds), ds.train, nbr, epochs=3)
+    dp_a = dmf.fit(_cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=1),
+                   ds.train, nbr, epochs=3)
+    dp_a2 = dmf.fit(_cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=1),
+                    ds.train, nbr, epochs=3)
+    dp_b = dmf.fit(_cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=2),
+                   ds.train, nbr, epochs=3)
+    assert dp_a.train_losses != plain.train_losses      # noise is applied
+    assert dp_a.train_losses == dp_a2.train_losses      # and reproducible
+    assert dp_a.train_losses != dp_b.train_losses       # and seed-keyed
+
+
+def test_dp_pallas_matches_jnp_path():
+    ds, nbr = _world()
+    cfg = _cfg(ds, dp_sigma=0.5, dp_clip=1.0)
+    a = dmf.fit(cfg, ds.train, nbr, epochs=3)
+    b = dmf.fit(dataclasses.replace(cfg, use_pallas=True), ds.train, nbr,
+                epochs=3)
+    np.testing.assert_allclose(a.train_losses, b.train_losses, atol=1e-7)
+
+
+def test_dp_message_masks_padded_rows():
+    cfg = dmf.DMFConfig(n_users=8, n_items=8, dim=4, dp_sigma=1.0, dp_clip=1.0)
+    gp = jnp.zeros((16, 4), jnp.float32)
+    valid = jnp.asarray([1.0] * 10 + [0.0] * 6)
+    noise = dmf._dp_noise_rows(
+        jnp.arange(16, dtype=jnp.int32), jnp.asarray(0, jnp.int32), cfg, 4)
+    out = np.asarray(dmf._dp_message(gp, noise, cfg, valid))
+    assert (out[:10] != 0).any()            # real rows got noise
+    np.testing.assert_array_equal(out[10:], 0.0)   # pad rows stay no-ops
+
+
+def test_sigma_zero_requires_nothing_but_sigma_needs_finite_clip():
+    with pytest.raises(AssertionError):
+        dmf.DMFConfig(n_users=4, n_items=4, dp_sigma=1.0)   # clip=inf
+    cfg = dmf.DMFConfig(n_users=4, n_items=4, dp_clip=1.0)  # clip-only: OK
+    assert cfg.dp and mechanism.noise_std(cfg) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Accountant
+# ---------------------------------------------------------------------------
+def test_rdp_reduces_to_gaussian_at_q1():
+    alphas = (2, 4, 8)
+    got = rdp_subsampled_gaussian(1.0, 2.0, alphas)
+    np.testing.assert_allclose(got, [a / (2 * 4.0) for a in alphas])
+    assert (rdp_subsampled_gaussian(0.0, 2.0, alphas) == 0).all()
+
+
+def test_epsilon_monotone_in_sigma_and_steps():
+    q, steps = 0.05, 200
+    eps = [float(rdp_to_epsilon(steps * rdp_subsampled_gaussian(q, s))[0])
+           for s in (0.5, 1.0, 2.0, 4.0)]
+    assert eps == sorted(eps, reverse=True) and eps[-1] > 0
+    e1 = float(rdp_to_epsilon(100 * rdp_subsampled_gaussian(q, 1.0))[0])
+    e2 = float(rdp_to_epsilon(400 * rdp_subsampled_gaussian(q, 1.0))[0])
+    assert e2 > e1
+
+
+def test_sigma_for_epsilon_roundtrip():
+    q, steps, delta = 0.02, 500, 1e-5
+    for target in (0.5, 2.0, 8.0):
+        s = sigma_for_epsilon(target, q, steps, delta)
+        eps = float(rdp_to_epsilon(
+            steps * rdp_subsampled_gaussian(q, s), delta=delta)[0])
+        assert eps <= target * 1.001 and eps >= target * 0.9
+
+
+def test_accountant_tracks_realized_participation():
+    acc = GaussianAccountant(n_users=6, sigma=1.0)
+    ui = np.asarray([[0, 0, 1, 2], [0, 3, 3, 3]])   # nb=2 batches of B=4
+    acc.observe_epoch(ui)
+    assert acc.epochs == 1
+    np.testing.assert_array_equal(acc.messages, [3, 1, 1, 3, 0, 0])
+    eps, _ = acc.epsilon()
+    # learner 0: both batches (q=1, k̄=1.5); learners 1-2: one batch, one
+    # row (q=.5, k̄=1); learner 3: one batch, THREE rows (q=.5, k̄=3 — the
+    # simultaneous releases compose at σ/√k̄, so 3 > 1); 4-5: never → ε=0
+    assert eps[1] == eps[2]
+    assert eps[3] > eps[1] > eps[4] == eps[5] == 0
+    assert eps[0] > eps[1]
+    s = acc.summary()
+    assert s["eps_max"] == pytest.approx(float(eps.max()))
+    assert s["messages_total"] == 8
+    acc.observe_epoch(ui)
+    assert acc.eps_trajectory[1] > acc.eps_trajectory[0]
+
+
+# ---------------------------------------------------------------------------
+# Audit: noise kills the attacks
+# ---------------------------------------------------------------------------
+def test_audit_advantage_drops_with_noise():
+    ds, nbr = _world(n_users=64, n_items=40, n_ratings=500, seed=2)
+    leaky = audit.run_audit(_cfg(ds), ds.train, nbr, ds.n_users, ds.n_items,
+                            epochs=1, n_pairs=300)
+    noisy = audit.run_audit(_cfg(ds, dp_sigma=4.0, dp_clip=1.0), ds.train,
+                            nbr, ds.n_users, ds.n_items, epochs=1, n_pairs=300)
+    # un-noised gradients leak ratings nearly perfectly...
+    assert leaky["rating_norm_advantage"] > 0.8
+    assert leaky["rating_inversion_advantage"] > 0.8
+    assert leaky["membership_advantage"] > 0.5
+    # ...and heavy noise collapses every attack
+    assert noisy["rating_norm_advantage"] < leaky["rating_norm_advantage"] - 0.3
+    assert noisy["rating_inversion_advantage"] < (
+        leaky["rating_inversion_advantage"] - 0.3)
+    assert noisy["membership_advantage"] < leaky["membership_advantage"]
+    assert noisy["n_messages"] == leaky["n_messages"] > 0
+
+
+def test_audit_stream_matches_trained_state():
+    """The audit's replayed capture IS the training path: after one epoch
+    its evolved factors equal `train_epoch`'s (same rng protocol)."""
+    ds, nbr = _world(n_users=64, n_items=40, n_ratings=500, seed=2)
+    cfg = _cfg(ds, dp_sigma=0.5, dp_clip=1.0)
+    log = audit.observe_messages(cfg, ds.train, nbr, epochs=1)
+    rng = np.random.default_rng(cfg.seed)
+    state = dmf.init_state(cfg, rng)
+    ui, _, _, _ = dmf.sample_epoch(ds.train, cfg, rng)
+    n = (len(ui) // cfg.batch_size) * cfg.batch_size
+    assert len(log.sender) == n
+    np.testing.assert_array_equal(log.sender, ui[:n])
+    # messages are clipped (post-mechanism stream, modulo added noise which
+    # is bounded in norm for this σ·C with overwhelming margin here)
+    assert np.isfinite(log.gp).all()
+
+
+# ---------------------------------------------------------------------------
+# Online refresh: DP applies to the streamed channel too
+# ---------------------------------------------------------------------------
+@pytest.mark.serving
+def test_online_refresh_dp_keeps_locality_and_noises_messages():
+    from repro.serving import online as online_lib
+
+    ds, nbr = _world()
+    cfg = _cfg(ds)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=3)
+    rng = np.random.default_rng(5)
+    events = np.stack([rng.integers(0, ds.n_users, 12),
+                       rng.integers(0, ds.n_items, 12)], 1)
+
+    def copy_state():
+        return dmf.DMFState(U=jnp.array(res.state.U), P=jnp.array(res.state.P),
+                            Q=jnp.array(res.state.Q))
+
+    cfg_dp = _cfg(ds, dp_sigma=0.5, dp_clip=1.0)
+    st_dp, rep = online_lib.online_refresh(
+        copy_state(), nbr, events, cfg_dp, rng=np.random.default_rng(7))
+    st_plain, _ = online_lib.online_refresh(
+        copy_state(), nbr, events, cfg, rng=np.random.default_rng(7))
+    # locality contract unchanged under DP: untouched rows bit-identical
+    untouched = np.setdiff1d(np.arange(ds.n_users), rep.touched_users)
+    np.testing.assert_array_equal(np.asarray(st_dp.P)[untouched],
+                                  np.asarray(res.state.P)[untouched])
+    # and the refresh messages were actually noised
+    assert not np.allclose(np.asarray(st_dp.P)[rep.touched_users],
+                           np.asarray(st_plain.P)[rep.touched_users])

@@ -311,6 +311,86 @@ def test_online_refresh_empty_events_noop():
     np.testing.assert_array_equal(np.asarray(new_state.U), np.asarray(state.U))
 
 
+def test_engine_ingest_duplicate_events_in_one_window():
+    """The same (user, item) check-in repeated inside one refresh window:
+    the refresh treats each occurrence as an event (order-free sum of
+    per-rating SGD contributions — heavier pull, same receivers), the
+    seen-filter sets once, and the engine never recommends the item again."""
+    ds, nbr, cfg, state = _world(epochs=4)
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    base = ds.test[:4]
+    events = np.concatenate([base, base, base[:2]])   # dups in one window
+    report = eng.ingest(events, OnlineConfig(batch_cap=64, steps=1))
+    assert report.n_events == len(events)
+    np.testing.assert_array_equal(
+        report.affected_users, np.unique(base[:, 0]))
+    # served view stays consistent with the refreshed factors
+    np.testing.assert_array_equal(
+        np.asarray(eng.V), np.asarray(eng.state.P + eng.state.Q))
+    assert np.asarray(eng.seen)[base[:, 0], base[:, 1]].all()
+    _, recs = eng.recommend(np.unique(base[:, 0]))
+    for row, u in zip(recs, np.unique(base[:, 0])):
+        own = base[base[:, 0] == u, 1]
+        assert not set(own.tolist()) & set(row[row >= 0].tolist())
+
+
+def test_engine_ingest_empty_event_stream():
+    ds, nbr, cfg, state = _world(epochs=2)
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    V0 = np.asarray(eng.V).copy()
+    seen0 = np.asarray(eng.seen).copy()
+    report = eng.ingest(np.empty((0, 2), np.int64))
+    assert report.n_events == 0 and report.n_batches == 0
+    assert len(report.affected_users) == 0
+    np.testing.assert_array_equal(np.asarray(eng.V), V0)
+    np.testing.assert_array_equal(np.asarray(eng.seen), seen0)
+    vals, recs = eng.recommend(np.arange(8))          # still serves
+    assert recs.shape == (8, 5)
+
+
+def test_engine_ingest_user_in_truncated_bucket_keeps_index_intact():
+    """Events for users whose city bucket is AT CAPACITY (city > cap,
+    priority-truncated): ingest must refresh factors/seen only — the
+    candidate index is immutable and must come out bit-identical, and
+    recommendations stay inside the truncated bucket and unseen."""
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=60, n_items=300, n_ratings=900, n_cities=2, seed=5))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=2)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                        beta=0.1, gamma=0.01, batch_size=64)
+    res = dmf.fit(cfg, ds.train, nbr, epochs=3)
+    index = index_from_dataset(ds, cap=128)           # both cities > 128
+    assert index.n_truncated_buckets >= 1
+    full_users = np.flatnonzero(~index.user_fits())
+    assert len(full_users) > 0
+    items0 = index.bucket_items.copy()
+    sizes0 = index.bucket_size.copy()
+    eng = ServingEngine(res.state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    rng = np.random.default_rng(9)
+    u = full_users[: 6]
+    events = np.stack([u, rng.integers(0, ds.n_items, len(u))], 1)
+    eng.ingest(events, OnlineConfig(batch_cap=64, steps=2))
+    # the index is untouched — capacity pressure cannot corrupt it
+    np.testing.assert_array_equal(eng.index.bucket_items, items0)
+    np.testing.assert_array_equal(eng.index.bucket_size, sizes0)
+    assert eng.index.cap == 128
+    # and serving those users stays bucket-constrained and seen-filtered
+    _, recs = eng.recommend(u)
+    seen = np.asarray(eng.seen)
+    for row, uu in zip(recs, u):
+        bucket = set(items0[index.user_bucket[uu]].tolist()) - {-1}
+        got = row[row >= 0]
+        assert set(got.tolist()) <= bucket
+        assert not seen[uu, got].any()
+
+
 def test_online_refresh_padded_rows_are_exact_noops():
     """batch_cap >> n_events: padded conf=0/valid=0 rows must contribute
     exactly nothing (regularizer pulls masked too)."""
