@@ -1,0 +1,170 @@
+"""Robustness benchmark: training under learner churn + stale gradient
+exchange, and the cost of crash-consistency (ISSUE 6 tentpole).
+
+Three questions, answered on the synthetic Foursquare config:
+
+1. **Degradation surface** — final train/test loss and ranking metrics
+   over a dropout × staleness grid (plus a late-joiner point), each
+   against the fault-free anchor: how much accuracy does realistic fleet
+   availability cost? The no-churn grid point doubles as a wiring check —
+   it must reproduce the fault-free run exactly (loss_gap == 0).
+2. **Churn-path overhead** — epochs/sec of the fault-injected epoch
+   (gates + delay-ring delivery) vs the plain sparse scan, and the cost
+   of checkpointing every epoch on top.
+3. **Resume exactness** — run with periodic snapshots, "crash", resume:
+   the continued run must be bit-identical (DP on), reported as a bool.
+
+Writes ``BENCH_churn.json`` (repo root + benchmarks/results mirror):
+
+    PYTHONPATH=src python -m benchmarks.run --only robustness
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.robustness import ChurnConfig
+
+# dropout × max-staleness grid; (0, 0) is the fault-free anchor the gaps
+# are measured against. 0.3/2 is the envelope the test suite pins.
+DROPOUTS = (0.0, 0.1, 0.3)
+STALENESS = (0, 1, 2)
+
+
+def _grid_point(cfg, train, nbr, ds, epochs, dropout, k_max, base=None,
+                **churn_kw):
+    # every grid point runs the churn path — the (0, 0) anchor with the
+    # TRIVIAL plan, so its gap-vs-plain is a live bit-exactness check
+    churn = ChurnConfig(dropout=dropout,
+                        delay_classes=tuple(range(k_max + 1)),
+                        seed=17, **churn_kw)
+    res = dmf.fit(cfg, train, nbr, epochs=epochs, test=ds.test, churn=churn)
+    ev = dmf.evaluate(res.state, train, ds.test, ds.n_users, ds.n_items)
+    plan = churn.compile(cfg.n_users, epochs)
+    row = {
+        "dropout": dropout,
+        "k_max": k_max,
+        "participation_rate": plan.participation_rate,
+        "train_loss_final": float(res.train_losses[-1]),
+        "test_loss_final": float(res.test_losses[-1]),
+        **{k: float(v) for k, v in ev.items()},
+    }
+    if base is not None:
+        row["loss_gap_vs_faultfree"] = float(
+            res.train_losses[-1] - base["train_loss_final"])
+    return row, res
+
+
+def _time_epochs(cfg, train, nbr, n_timed, repeats=3, churn=None,
+                 checkpoint_every=0):
+    """Best-of-``repeats`` epochs/sec (erratic container CPU shares — see
+    privacy_bench), full `fit` runs so churn compilation, ring carry and
+    checkpoint I/O are all inside the measured path."""
+    best = float("inf")
+    with tempfile.TemporaryDirectory() as td:
+        kw = {}
+        if checkpoint_every:
+            kw = {"checkpoint_dir": td, "checkpoint_every": checkpoint_every}
+        res = dmf.fit(cfg, train, nbr, epochs=1, churn=churn, **kw)  # warm
+        jax.block_until_ready(res.state.U)
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = dmf.fit(cfg, train, nbr, epochs=n_timed, churn=churn, **kw)
+            jax.block_until_ready(res.state.U)
+            best = min(best, time.perf_counter() - t0)
+    return n_timed / best
+
+
+def main(full: bool = False, tiny: bool = False, n_timed: int = 4,
+         epochs: int | None = None) -> dict:
+    if tiny:
+        ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+            n_users=192, n_items=96, n_ratings=1200, n_cities=4))
+        epochs = epochs or 6
+    else:
+        ds = synthetic_poi.foursquare_like(reduced=not full)
+        epochs = epochs or (60 if full else 30)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+
+    grid = []
+    base = None
+    for dropout in DROPOUTS:
+        for k_max in STALENESS:
+            row, _ = _grid_point(cfg, ds.train, nbr, ds, epochs, dropout,
+                                 k_max, base=base)
+            if base is None:                 # (0, 0): the fault-free anchor
+                base = row
+                # wiring check: the trivial plan must BE the plain run —
+                # a nonzero gap here means the churn path drifted
+                plain = dmf.fit(cfg, ds.train, nbr, epochs=epochs,
+                                test=ds.test)
+                row["loss_gap_vs_faultfree"] = float(
+                    row["train_loss_final"] - plain.train_losses[-1])
+            grid.append(row)
+    late, _ = _grid_point(cfg, ds.train, nbr, ds, epochs, 0.1, 1, base=base,
+                          late_frac=0.25, late_by=0.5)
+    late["late_frac"] = 0.25
+
+    # resume exactness with DP on: full run vs crash-at-midpoint + resume
+    dp_cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                           beta=0.1, gamma=0.01, dp_sigma=0.5, dp_clip=0.25)
+    cc = ChurnConfig(dropout=0.2, delay_classes=(0, 1, 2), seed=17)
+    r_epochs = max(4, epochs // 4)
+    mid = r_epochs // 2
+    with tempfile.TemporaryDirectory() as td:
+        whole = dmf.fit(dp_cfg, ds.train, nbr, epochs=r_epochs, churn=cc,
+                        checkpoint_dir=td, checkpoint_every=mid)
+        resumed = dmf.fit(dp_cfg, ds.train, nbr, epochs=r_epochs, churn=cc,
+                          resume_from=f"{td}/step_{mid}")
+    bit_identical = bool(
+        whole.train_losses == resumed.train_losses
+        and (np.asarray(whole.state.U) == np.asarray(resumed.state.U)).all()
+        and (np.asarray(whole.state.P) == np.asarray(resumed.state.P)).all()
+        and whole.privacy == resumed.privacy)
+
+    # overheads: churn gates + ring vs plain scan; checkpoint-every-epoch
+    eps_plain = _time_epochs(cfg, ds.train, nbr, n_timed)
+    eps_churn = _time_epochs(cfg, ds.train, nbr, n_timed,
+                             churn=ChurnConfig(dropout=0.2,
+                                               delay_classes=(0, 1, 2),
+                                               seed=17))
+    eps_ckpt = _time_epochs(cfg, ds.train, nbr, n_timed, checkpoint_every=1)
+
+    res = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items, "dim": 10,
+            "n_train": int(len(ds.train)), "epochs": epochs,
+            "dropout_grid": list(DROPOUTS), "staleness_grid": list(STALENESS),
+            "resume_epochs": r_epochs, "resume_crash_at": mid,
+        },
+        "grid": grid,
+        "late_join": late,
+        "resume": {
+            "bit_identical_with_dp": bit_identical,
+            "dp_sigma": dp_cfg.dp_sigma,
+        },
+        "epochs_per_sec": {
+            "sparse_scan": eps_plain,
+            "churn_path": eps_churn,
+            "checkpoint_every_epoch": eps_ckpt,
+        },
+        "churn_overhead_vs_base": eps_plain / eps_churn - 1.0,
+        "checkpoint_overhead_vs_base": eps_plain / eps_ckpt - 1.0,
+    }
+    common.save_json("BENCH_churn", res)   # mirrors to repo root
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

@@ -19,8 +19,8 @@ import time
 # silently running nothing
 SECTIONS = (
     "paper_tables", "convergence", "reg_sweep", "walk_sweep", "dmf_train",
-    "serving", "privacy", "complexity", "gossip_ablation", "perf_report",
-    "kernels", "roofline",
+    "serving", "privacy", "robustness", "complexity", "gossip_ablation",
+    "perf_report", "kernels", "roofline",
 )
 
 
@@ -187,6 +187,24 @@ def main() -> None:
             f"monotone={res['attack_advantage_monotone_nonincreasing']};"
             f"dp_overhead_fused="
             f"{res['dp_overhead_fused_vs_pallas_base']:.3f}"
+        )
+
+    if want("robustness"):
+        from benchmarks import churn_bench
+        _section("robustness (churn/staleness degradation + crash-resume)")
+        t0 = time.perf_counter()
+        res = churn_bench.main(full=args.full)   # saves BENCH_churn itself
+        us = (time.perf_counter() - t0) * 1e6
+        worst = max(res["grid"][1:],
+                    key=lambda r: abs(r["loss_gap_vs_faultfree"]))
+        print(
+            f"robustness,{us:.0f},"
+            f"anchor_gap={res['grid'][0]['loss_gap_vs_faultfree']:.2e};"
+            f"worst_gap=p{worst['dropout']}k{worst['k_max']}:"
+            f"{worst['loss_gap_vs_faultfree']:.4f};"
+            f"resume_bit_identical={res['resume']['bit_identical_with_dp']};"
+            f"churn_overhead={res['churn_overhead_vs_base']:.3f};"
+            f"ckpt_overhead={res['checkpoint_overhead_vs_base']:.3f}"
         )
 
     if want("complexity"):

@@ -39,7 +39,11 @@ def save(path: str | pathlib.Path, tree, step: int | None = None) -> None:
         arr = np.asarray(leaf)
         fn = name.replace("/", "__") + ".npy"
         raw = arr.dtype.kind not in "biufc"  # bf16/fp8: numpy stores as void
-        np.save(path / fn, arr.view(np.uint8) if raw else arr)
+        # raw leaves save as a FLAT byte buffer: .view(uint8) on the shaped
+        # array rejects 0-d scalars, and restore reshapes from the manifest
+        np.save(path / fn,
+                np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+                if raw else arr)
         manifest["leaves"][name] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "raw": raw,

@@ -104,6 +104,12 @@ class DMFState:
     Q: jnp.ndarray   # (I, J, K) personal factors
 
 
+# Registered as a pytree so the state checkpoints/restores as three leaves
+# (checkpoint/ckpt.py flattens by key path) instead of one opaque object.
+jax.tree_util.register_dataclass(
+    DMFState, data_fields=["U", "P", "Q"], meta_fields=[])
+
+
 def init_state(cfg: DMFConfig, rng: np.random.Generator | None = None) -> DMFState:
     """U random; P and Q zero.
 
@@ -266,7 +272,8 @@ def _step_deltas_dp(U, P, Q, ui, vj, r, conf, cfg: DMFConfig, valid, noise):
 
 def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
                                   cfg: DMFConfig, valid=None, rid=None,
-                                  dp_seed=None, noise=None):
+                                  dp_seed=None, noise=None, recv_gate=None,
+                                  prop_now=None):
     """One minibatch of Alg. 1 against the sparse neighbor table.
 
     Identical math to `_batch_step`; only the line 13-15 propagation differs:
@@ -279,6 +286,14 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
     included, applies only the noised message. Returns the per-row sent
     messages too (the observed outbox stream the audit harness attacks);
     `_sparse_batch_update` drops them for the training callers.
+
+    Fault gates (robustness/faults.py; both None on the fault-free paths):
+    ``recv_gate`` (I,) zeroes scatter weights into offline receivers —
+    messages to an absent learner are lost, its P rows bit-frozen.
+    ``prop_now`` (B,) restricts a straggler row's scatter to the sender's
+    own line-11 self slot: its neighbor deliveries come from the delay
+    ring k epochs later (`_epoch_scan_churn`). All-ones gates multiply
+    weights by 1.0 — bit-exact with the ungated path.
     """
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
@@ -296,6 +311,12 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
         # lands on its S receivers at item vj[b], weighted by the walk weight.
         nb = nbr_idx[ui]                           # (B, S) receiver users
         wb = nbr_wgt[ui]                           # (B, S) walk weights
+        if prop_now is not None:
+            # straggler rows (prop_now=0): keep only the self slot now
+            selfm = (nb == ui[:, None]).astype(wb.dtype)
+            wb = wb * jnp.maximum(prop_now[:, None], selfm)
+        if recv_gate is not None:
+            wb = wb * recv_gate[nb]                # offline receivers get 0
         upd = wb[:, :, None] * gp[:, None, :]      # (B, S, K)
         P = P.at[nb, vj[:, None]].add(-theta * upd)
     return U, P, Q, loss, gp
@@ -359,6 +380,144 @@ def _epoch_scan(
 
     (U, P, Q), losses = jax.lax.scan(body, (U, P, Q), xs)
     return U, P, Q, losses
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_ring"),
+                   donate_argnums=(0, 1, 2))
+def _epoch_scan_churn(
+    U: jnp.ndarray,
+    P: jnp.ndarray,
+    Q: jnp.ndarray,
+    nbr_idx: jnp.ndarray,      # (I, S)
+    nbr_wgt: jnp.ndarray,      # (I, S)
+    ui: jnp.ndarray,           # (n_batches, B)
+    vj: jnp.ndarray,
+    r: jnp.ndarray,
+    conf: jnp.ndarray,         # offline senders' rows already zeroed
+    valid: jnp.ndarray,        # (n_batches, B) sender-online row mask
+    prop_now: jnp.ndarray,     # (n_batches, B) full-scatter-this-epoch mask
+    recv_gate: jnp.ndarray,    # (I,) receiver-online mask this epoch
+    ring_gp: jnp.ndarray,      # (L, n, K) buffered released messages
+    ring_ui: jnp.ndarray,      # (L·n,) buffered senders (flattened)
+    ring_vj: jnp.ndarray,      # (L·n,) buffered item ids
+    ring_deliver: jnp.ndarray,  # (L·n,) float mask: due exactly this epoch
+    dp_seed: jnp.ndarray,      # () int32 per-epoch mechanism seed (traced)
+    cfg: DMFConfig,
+    use_ring: bool,
+):
+    """`_epoch_scan` under a fault schedule: same one-dispatch epoch, with
+    (1) start-of-epoch delivery of the delay ring's messages due now —
+    neighbor slots only (the straggler applied its own line-11 update at
+    release), gated by the receivers' online mask NOW; (2) per-row fault
+    gates threaded into every minibatch step; (3) the epoch's released
+    message stream collected for the ring (only when ``use_ring``).
+
+    Under the trivial schedule (all masks 1, ``use_ring=False``) every
+    fault op is a multiply-by-1.0 — bitwise identity — so the compiled
+    epoch produces exactly `_epoch_scan`'s outputs."""
+    theta = cfg.lr
+    if use_ring:
+        gflat = ring_gp.reshape(-1, ring_gp.shape[-1])    # (L·n, K)
+        nbd = nbr_idx[ring_ui]                            # (L·n, S)
+        wbd = nbr_wgt[ring_ui]
+        selfm = (nbd == ring_ui[:, None]).astype(wbd.dtype)
+        wbd = (wbd * (1.0 - selfm) * recv_gate[nbd]
+               * ring_deliver[:, None])
+        P = P.at[nbd, ring_vj[:, None]].add(
+            -theta * wbd[:, :, None] * gflat[:, None, :])
+    nb, B = ui.shape
+    from repro.privacy import mechanism
+    noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
+    if noise_on:
+        from repro.kernels.dp_noise import gauss_counter
+        K = U.shape[-1]
+        rid = jnp.arange(nb * B, dtype=jnp.int32).reshape(-1, 1)
+        Z = (mechanism.noise_std(cfg)
+             * gauss_counter(dp_seed, rid, K)).reshape(nb, B, K)
+        xs = (ui, vj, r, conf, valid, prop_now, Z)
+    else:
+        xs = (ui, vj, r, conf, valid, prop_now)
+
+    def body(carry, batch):
+        U, P, Q = carry
+        b_ui, b_vj, b_r, b_conf, b_val, b_prop = batch[:6]
+        U, P, Q, loss, gp = _sparse_batch_update_messages(
+            U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg,
+            valid=b_val, noise=batch[6] if noise_on else None,
+            recv_gate=recv_gate, prop_now=b_prop,
+        )
+        return (U, P, Q), ((loss, gp) if use_ring else loss)
+
+    (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), xs)
+    if use_ring:
+        losses, gps = ys
+        return U, P, Q, losses, gps
+    return U, P, Q, ys, None
+
+
+def train_epoch_churn(
+    state: DMFState,
+    prop,
+    train: np.ndarray,
+    cfg: DMFConfig,
+    rng: np.random.Generator,
+    t: int,
+    plan,                       # robustness.faults.ChurnPlan
+    ring,                       # robustness.faults.DelayRing | None
+    accountant=None,
+) -> tuple[DMFState, float]:
+    """`train_epoch` under a compiled `ChurnPlan` for epoch ``t``: the SAME
+    sampled stream (same rng consumption, per-epoch DP seed included), with
+    offline senders' rows zeroed host-side (conf=0 + valid=0 ⇒ their U/Q
+    rows bit-frozen and they release nothing), receivers gated by this
+    epoch's online mask, stragglers' neighbor scatters deferred through
+    ``ring``, and the accountant observing only the REALIZED stream.
+    Reported loss normalizes by realized (online) rows. ``cfg.n_shards>1``
+    dispatches to the SPMD counterpart (sharding/dmf.py)."""
+    if cfg.n_shards > 1:
+        from repro.sharding import dmf as sharded_dmf
+        return sharded_dmf.train_epoch_churn_sharded(
+            state, prop, train, cfg, rng, t, plan, ring,
+            accountant=accountant)
+    nbr = _as_neighbor_table(prop)
+    ui, vj, r, conf = sample_epoch(train, cfg, rng)
+    B = cfg.batch_size
+    nb = len(ui) // B
+    n = nb * B
+    shape = (nb, B)
+    ui2 = ui[:n].reshape(shape)
+    vj2 = vj[:n].reshape(shape)
+    _, dp_seed = epoch_dp_inputs(cfg, rng, n)
+    on, sender_on, prop_now, due = plan.epoch_row_masks(t, ui2)
+    conf2 = conf[:n].reshape(shape) * sender_on
+    if accountant is not None:
+        accountant.observe_epoch(ui2, valid=sender_on)
+    use_ring = ring is not None
+    if use_ring:
+        r_ui = ring.ui.reshape(-1)
+        r_vj = ring.vj.reshape(-1)
+        r_del = (ring.due.reshape(-1) == t).astype(np.float32)
+        ring_gp = ring.gp
+    else:  # statically-skipped dummies (dead jit inputs)
+        r_ui = np.zeros(1, np.int32)
+        r_vj = np.zeros(1, np.int32)
+        r_del = np.zeros(1, np.float32)
+        ring_gp = jnp.zeros((1, 1, state.U.shape[-1]), jnp.float32)
+    U, P, Q, losses, gps = _epoch_scan_churn(
+        state.U, state.P, state.Q, nbr.idx, nbr.wgt,
+        jnp.asarray(ui2), jnp.asarray(vj2),
+        jnp.asarray(r[:n].reshape(shape)), jnp.asarray(conf2),
+        jnp.asarray(sender_on.astype(np.float32)),
+        jnp.asarray(prop_now.astype(np.float32)),
+        jnp.asarray(on.astype(np.float32)),
+        ring_gp, jnp.asarray(r_ui), jnp.asarray(r_vj), jnp.asarray(r_del),
+        jnp.asarray(dp_seed, jnp.int32), cfg, use_ring,
+    )
+    if use_ring:
+        ring.write(t, gps.reshape(n, -1), ui2, vj2, due)
+    total = float(np.asarray(losses, dtype=np.float64).sum())
+    realized = int(sender_on.sum())
+    return DMFState(U, P, Q), total / max(realized, 1)
 
 
 def sample_with_negatives(
@@ -516,6 +675,10 @@ def fit(
     seed: int | None = None,
     dense_reference: bool = False,
     dp_delta: float = 1e-5,
+    churn=None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 0,
+    resume_from=None,
 ) -> FitResult:
     """Train `epochs` epochs of Alg. 1. `M` may be a dense (I, I) propagation
     matrix or a `graph.NeighborTable`; the sparse scan path is the default,
@@ -523,7 +686,16 @@ def fit(
 
     With DP on (``cfg.dp_sigma > 0``) a `privacy.GaussianAccountant`
     observes every epoch's realized minibatch stream; its per-learner
-    ε(``dp_delta``) summary lands in `FitResult.privacy`."""
+    ε(``dp_delta``) summary lands in `FitResult.privacy`.
+
+    Fault tolerance (robustness/): ``churn`` is a `ChurnConfig` (compiled
+    here) or pre-compiled `ChurnPlan` — epochs then run the fault-injected
+    path (offline learners bit-frozen, stragglers' messages delivered
+    late). ``checkpoint_dir`` + ``checkpoint_every`` snapshot the FULL loop
+    state (factors, rng stream, delay ring, accountant) every N completed
+    epochs; ``resume_from`` (a step dir or checkpoint root) restores one
+    and continues — bit-identical to the uninterrupted run, DP included
+    (the counter-keyed noise replays from the restored rng stream)."""
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     state = init_state(cfg, rng)
     accountant = None
@@ -531,6 +703,20 @@ def fit(
         from repro.privacy import GaussianAccountant
         accountant = GaussianAccountant(
             n_users=cfg.n_users, sigma=cfg.dp_sigma, delta=dp_delta)
+    plan = None
+    ring = None
+    if churn is not None:
+        from repro.robustness import faults
+        assert not dense_reference, "churn runs the sparse/sharded paths"
+        plan = (churn.compile(cfg.n_users, epochs)
+                if isinstance(churn, faults.ChurnConfig) else churn)
+        assert plan.n_users == cfg.n_users, (plan.n_users, cfg.n_users)
+        assert plan.n_epochs >= epochs, (plan.n_epochs, epochs)
+        # the per-epoch stream length is schedule-independent, so the ring
+        # shape is known up front
+        nb = (len(train) * (1 + cfg.neg_samples)) // cfg.batch_size
+        ring = faults.DelayRing.create(plan.k_max, nb * cfg.batch_size,
+                                       cfg.dim)
     if dense_reference:
         assert not isinstance(M, graph_lib.NeighborTable), (
             "dense_reference needs the dense M"
@@ -547,8 +733,17 @@ def fit(
         prop = _as_neighbor_table(M)
         epoch_fn = train_epoch
     tr_losses, te_losses = [], []
-    for t in range(epochs):
-        if epoch_fn is train_epoch_dense:
+    start = 0
+    if resume_from is not None:
+        from repro.robustness import recovery
+        state, rng, ring, start, tr_losses, te_losses = (
+            recovery.load_training(resume_from, like_state=state,
+                                   ring=ring, accountant=accountant))
+    for t in range(start, epochs):
+        if plan is not None:
+            state, l = train_epoch_churn(state, prop, train, cfg, rng, t,
+                                         plan, ring, accountant=accountant)
+        elif epoch_fn is train_epoch_dense:
             state, l = epoch_fn(state, prop, train, cfg, rng)
         else:
             state, l = epoch_fn(state, prop, train, cfg, rng,
@@ -558,6 +753,17 @@ def fit(
             te_losses.append(test_loss(state, test))
         if callback is not None:
             callback(t, state, l)
+        if (checkpoint_dir is not None and checkpoint_every > 0
+                and (t + 1) % checkpoint_every == 0):
+            from repro.robustness import recovery
+            snap = state
+            if cfg.n_shards > 1:
+                from repro.sharding import dmf as sharded_dmf
+                snap = sharded_dmf.unpad_state(state, cfg.n_users)
+            recovery.save_training(
+                checkpoint_dir, step=t + 1, state=snap, rng=rng, ring=ring,
+                accountant=accountant, train_losses=tr_losses,
+                test_losses=te_losses)
     if cfg.n_shards > 1 and not dense_reference:
         from repro.sharding import dmf as sharded_dmf
         state = sharded_dmf.unpad_state(state, cfg.n_users)

@@ -78,6 +78,30 @@ def main():
     ap.add_argument("--dp-seed", type=int, default=0,
                     help="DP mechanism base seed (per-epoch noise streams "
                          "are folded from it)")
+    ap.add_argument("--churn-dropout", type=float, default=0.0,
+                    help="per-epoch i.i.d. learner offline probability "
+                         "(robustness/faults.py; offline learners are "
+                         "bit-frozen, their messages lost)")
+    ap.add_argument("--churn-session-alpha", type=float, default=0.0,
+                    help="Pareto tail index of power-law online sessions "
+                         "(0 = no session process)")
+    ap.add_argument("--churn-delay", type=int, default=0,
+                    help="max staleness k: learners draw a delay class in "
+                         "0..k and their gradient messages land that many "
+                         "epochs late through the fixed-shape delay ring")
+    ap.add_argument("--churn-late-frac", type=float, default=0.0,
+                    help="fraction of learners that join mid-run "
+                         "(stateless before their join epoch)")
+    ap.add_argument("--churn-seed", type=int, default=0,
+                    help="churn schedule seed (independent of training rng)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot the full loop state (factors, rng, delay "
+                         "ring, eps ledger) under this directory")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot every N completed epochs (0 = off)")
+    ap.add_argument("--resume-from", default=None,
+                    help="a step_<t> dir or checkpoint root: restore and "
+                         "continue, bit-identical to the uninterrupted run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     _ensure_host_devices(args.n_shards)
@@ -131,6 +155,22 @@ def main():
         use_pallas=args.use_pallas, n_shards=args.n_shards,
         dp_clip=dp_clip, dp_sigma=dp_sigma, dp_seed=args.dp_seed,
     )
+    churn = None
+    if (args.churn_dropout > 0 or args.churn_session_alpha > 0
+            or args.churn_delay > 0 or args.churn_late_frac > 0):
+        from repro.robustness import ChurnConfig
+        churn = ChurnConfig(
+            dropout=args.churn_dropout,
+            session_alpha=args.churn_session_alpha,
+            delay_classes=tuple(range(args.churn_delay + 1)),
+            late_frac=args.churn_late_frac,
+            seed=args.churn_seed,
+        )
+        plan = churn.compile(ds.n_users, args.epochs)
+        print(f"churn dropout={args.churn_dropout} "
+              f"delay<= {args.churn_delay} late_frac={args.churn_late_frac} "
+              f"participation={plan.participation_rate:.3f}")
+
     comm = graph.communication_bytes(
         W, D=args.walk_length, K=args.dim, n_ratings=len(ds.train))
     fanout = ("dense" if args.dense_reference
@@ -145,7 +185,10 @@ def main():
 
     res = dmf.fit(cfg, ds.train, prop, epochs=args.epochs, test=ds.test,
                   callback=cb, dense_reference=args.dense_reference,
-                  dp_delta=args.dp_delta)
+                  dp_delta=args.dp_delta, churn=churn,
+                  checkpoint_dir=args.checkpoint_dir,
+                  checkpoint_every=args.checkpoint_every,
+                  resume_from=args.resume_from)
     ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
                       n_shards=args.n_shards)
     if res.privacy is not None:

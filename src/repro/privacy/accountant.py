@@ -142,11 +142,17 @@ class GaussianAccountant:
         self.epochs = 0
         self.eps_trajectory: list[float] = []
 
-    def observe_epoch(self, ui_batches: np.ndarray) -> None:
+    def observe_epoch(self, ui_batches: np.ndarray, valid=None) -> None:
         """Account one epoch from its realized stream: ``ui_batches`` is
         the (nb, B) per-batch sender ids actually dispatched. Learner i's
         sampling rate this epoch is (their participating batches)/nb, and
         the epoch composes nb subsampled-Gaussian steps at that rate.
+
+        ``valid`` (optional (nb, B) bool) masks rows that did NOT release —
+        the churn path's offline senders (robustness/faults.py): an offline
+        learner's rows are zeroed before dispatch, so they must not be
+        charged. ε is therefore monotone in realized participation: fewer
+        valid rows ⇒ lower q and fewer compositions ⇒ no more privacy loss.
 
         Multi-row participation: a participating batch usually carries
         SEVERAL of learner i's rows (each rating spawns 1+m messages),
@@ -165,6 +171,8 @@ class GaussianAccountant:
         # which the million-learner target cannot afford
         keys = (np.repeat(np.arange(nb, dtype=np.int64), ui.shape[1])
                 * self.n_users + ui.reshape(-1))
+        if valid is not None:
+            keys = keys[np.asarray(valid).reshape(-1).astype(bool)]
         uniq, counts = np.unique(keys, return_counts=True)
         users = (uniq % self.n_users).astype(np.int64)
         msgs = np.bincount(users, weights=counts,

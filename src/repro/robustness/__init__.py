@@ -1,0 +1,21 @@
+"""Fault injection and fault tolerance for decentralized training.
+
+The paper's learners are phones: they drop offline, straggle, and join
+mid-training. This package makes that realism first-class:
+
+* `faults`   — seeded, deterministic `ChurnConfig`/`ChurnPlan` (per-epoch
+  Bernoulli dropout, power-law session lengths, straggler delay classes,
+  late-joining cold-start learners) compiled to fixed-shape per-epoch
+  participation masks, plus the `DelayRing` buffer that applies a
+  straggler's outgoing gradient messages k epochs late.
+* `recovery` — crash-consistent training checkpoints: snapshot + restore
+  of the FULL loop state (factors, rng stream, delay ring, DP accountant)
+  so `dmf.fit(resume_from=...)` is bit-identical to the uninterrupted run.
+"""
+from repro.robustness.faults import (  # noqa: F401
+    ChurnConfig,
+    ChurnPlan,
+    DelayRing,
+    no_churn,
+)
+from repro.robustness import recovery  # noqa: F401

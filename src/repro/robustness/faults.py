@@ -1,0 +1,219 @@
+"""Deterministic fault injection: learner churn + stale gradient exchange.
+
+The committed training paths assume all I learners participate in every
+epoch, synchronously — the one thing real phones never do. This module
+models the deviations the decentralized-device literature cares about
+("Decentralized Collaborative Learning Framework for Next POI
+Recommendation"; gossip-convergence analysis in "Matrix Factorization
+Method for Decentralized Recommender Systems"):
+
+* **Dropout** — per-epoch i.i.d. Bernoulli offline probability;
+* **Sessions** — power-law (Pareto-tailed) online-session lengths with
+  offline gaps, the heavy-tailed availability traces real fleets show;
+* **Late joiners** — cold-start learners that enter mid-training and have
+  no state before their join epoch;
+* **Stragglers** — per-learner delay classes: a class-k learner computes
+  locally on time but its *outgoing* P-gradient messages reach receivers
+  k epochs late (stale gradient exchange).
+
+Everything compiles AHEAD of the run to fixed-shape numpy arrays
+(`ChurnPlan`: an (epochs, I) participation mask + an (I,) delay class),
+from the schedule's OWN seed — the training rng stream is never touched,
+so a no-churn schedule leaves the fault-free run bit-exact.
+
+Fault semantics (the contract DESIGN.md §10 documents and
+tests/test_robustness.py pins):
+
+* An offline learner is **bit-frozen**: its rows send no updates (its
+  ratings are masked out of the epoch) and receive none (scatter weights
+  into offline receivers are zeroed). Messages addressed to an offline
+  learner are LOST, not queued — rejoining learners catch up through the
+  protocol itself, receiving fresh gradients from the epoch they return.
+* A straggler's own line-11 update applies immediately (local compute is
+  never late); only the cross-learner deliveries lag, via the `DelayRing`
+  below: messages released in epoch t with delay k are scatter-applied at
+  the START of epoch t+k, gated by the receivers' online mask *then*.
+* Delayed messages buffer AFTER the DP mechanism (clip+noise at release
+  time), so the ring only ever holds already-released messages — staleness
+  does not touch the privacy contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Schedule parameters. `compile(n_users, epochs)` realizes them into a
+    `ChurnPlan`; the draw order (sessions → dropout → late join → delay
+    classes) is fixed, so a seed fully determines the plan."""
+
+    dropout: float = 0.0            # per-epoch Bernoulli offline probability
+    session_alpha: float = 0.0      # >0: Pareto tail index of session lengths
+    session_scale: float = 4.0      # min online-session length (epochs)
+    offline_scale: float = 1.0      # min offline-gap length (epochs)
+    late_frac: float = 0.0          # fraction of learners joining mid-run
+    late_by: float = 0.5            # joins land uniformly in [1, late_by·T]
+    delay_classes: tuple = (0,)     # straggler classes (epochs of staleness)
+    delay_probs: tuple | None = None  # class probabilities (default uniform)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 0.0 <= self.dropout < 1.0, self.dropout
+        assert 0.0 <= self.late_frac <= 1.0, self.late_frac
+        assert all(int(d) == d and d >= 0 for d in self.delay_classes), (
+            self.delay_classes)
+        if self.delay_probs is not None:
+            assert len(self.delay_probs) == len(self.delay_classes)
+
+    def compile(self, n_users: int, epochs: int) -> "ChurnPlan":
+        rng = np.random.default_rng(self.seed)
+        online = np.ones((epochs, n_users), dtype=bool)
+        # 1. power-law sessions: alternate online/offline runs per learner
+        if self.session_alpha > 0:
+            for i in range(n_users):
+                t, up = 0, bool(rng.random() < 0.8)   # most start online
+                while t < epochs:
+                    scale = self.session_scale if up else self.offline_scale
+                    length = int(np.ceil(scale * (1.0 + rng.pareto(
+                        self.session_alpha))))
+                    if not up:
+                        online[t: t + length, i] = False
+                    t += length
+                    up = not up
+        # 2. i.i.d. per-epoch dropout on top of the session process
+        if self.dropout > 0:
+            online &= rng.random((epochs, n_users)) >= self.dropout
+        # 3. late joiners: offline (and stateless) before their join epoch
+        n_late = int(round(self.late_frac * n_users))
+        join = np.zeros(n_users, np.int32)
+        if n_late > 0:
+            late_users = rng.choice(n_users, size=n_late, replace=False)
+            hi = max(2, int(round(self.late_by * epochs)))
+            join[late_users] = rng.integers(1, hi + 1, size=n_late)
+            for u in late_users:
+                online[: join[u], u] = False
+        # 4. straggler delay classes
+        classes = np.asarray(self.delay_classes, np.int32)
+        probs = (None if self.delay_probs is None
+                 else np.asarray(self.delay_probs, np.float64))
+        delay = rng.choice(classes, size=n_users, p=probs).astype(np.int32)
+        return ChurnPlan(online=online, delay=delay, join_epoch=join,
+                         config=self)
+
+
+def no_churn(n_users: int, epochs: int) -> "ChurnPlan":
+    """The trivial plan: everyone online every epoch, zero staleness. The
+    robust epoch path under this plan is bit-exact with the fault-free
+    paths (tests/test_robustness.py pins it, single-device and sharded)."""
+    return ChurnConfig().compile(n_users, epochs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnPlan:
+    """A compiled schedule: pure data, safe to hash/ship/replay."""
+
+    online: np.ndarray       # (epochs, I) bool — participation mask
+    delay: np.ndarray        # (I,) int32 — per-learner staleness class
+    join_epoch: np.ndarray   # (I,) int32 — 0 for from-the-start learners
+    config: ChurnConfig | None = None
+
+    @property
+    def n_epochs(self) -> int:
+        return int(self.online.shape[0])
+
+    @property
+    def n_users(self) -> int:
+        return int(self.online.shape[1])
+
+    @property
+    def k_max(self) -> int:
+        """Ring depth: the largest staleness any learner's messages carry."""
+        return int(self.delay.max()) if self.delay.size else 0
+
+    @property
+    def participation_rate(self) -> float:
+        return float(self.online.mean()) if self.online.size else 1.0
+
+    def is_trivial(self) -> bool:
+        return bool(self.online.all()) and self.k_max == 0
+
+    def epoch_row_masks(self, t: int, ui: np.ndarray):
+        """Per-row fault gates for epoch ``t`` of a sampled (nb, B) sender
+        stream ``ui``:
+
+        * ``sender_on`` — row's sender is online (False ⇒ the row is fully
+          inert: conf is zeroed host-side and valid=0 kills the
+          regularizer pulls, freezing the learner's U/Q rows);
+        * ``prop_now`` — sender online AND delay class 0 ⇒ the full
+          neighbor scatter happens this epoch (stragglers scatter only
+          their own line-11 self-slot now);
+        * ``due``     — delivery epoch of the row's buffered message
+          (t + delay for online stragglers, -1 = never buffered).
+        """
+        assert 0 <= t < self.n_epochs, (t, self.n_epochs)
+        on = self.online[t]
+        sender_on = on[ui]
+        d = self.delay[ui]
+        prop_now = sender_on & (d == 0)
+        due = np.where(sender_on & (d > 0), t + d, -1).astype(np.int32)
+        return on, sender_on, prop_now, due
+
+
+@dataclasses.dataclass
+class DelayRing:
+    """Fixed-shape stale-message buffer, carried across epochs by `fit`.
+
+    Slot ``t % slots`` holds ALL of epoch t's delayed released messages
+    (one row per stream position — ``gp`` is the post-DP message content,
+    ``ui``/``vj``/``due`` its addressing). Since every delay class is
+    ≤ ``slots``, a slot being overwritten at epoch t was written at
+    t - slots and all its rows had due ≤ t — already delivered — so the
+    ring is collision-free by construction. Delivery each epoch scans all
+    slots with a ``due == t`` mask: exact, fixed-shape, one scatter.
+
+    ``gp`` is a device array (written by the jitted epoch, which also
+    performs delivery); the addressing arrays are host numpy, precomputable
+    from the sampled stream before dispatch.
+    """
+
+    gp: jnp.ndarray   # (slots, n, K) float32 — released message content
+    ui: np.ndarray    # (slots, n) int32 — global sender ids
+    vj: np.ndarray    # (slots, n) int32 — item ids
+    due: np.ndarray   # (slots, n) int32 — delivery epoch, -1 = empty
+
+    @classmethod
+    def create(cls, k_max: int, n: int, dim: int) -> "DelayRing | None":
+        """Ring for staleness ≤ k_max over an n-row epoch stream; None when
+        k_max == 0 (no stragglers ⇒ no buffer, no extra compute)."""
+        if k_max <= 0:
+            return None
+        return cls(
+            gp=jnp.zeros((k_max, n, dim), jnp.float32),
+            ui=np.zeros((k_max, n), np.int32),
+            vj=np.zeros((k_max, n), np.int32),
+            due=np.full((k_max, n), -1, np.int32),
+        )
+
+    @property
+    def slots(self) -> int:
+        return int(self.ui.shape[0])
+
+    def write(self, t: int, gp_new: jnp.ndarray, ui: np.ndarray,
+              vj: np.ndarray, due: np.ndarray) -> None:
+        """Record epoch t's released messages into its ring slot (called
+        AFTER the epoch dispatch delivered everything due at t).
+
+        Copy-on-write, never in place: views of these arrays are handed to
+        `jnp.asarray` each epoch, and jax CPU transfers may be ZERO-COPY —
+        mutating the buffer would race the still-in-flight async epoch
+        reading it (observed as one-in-several-runs resume mismatches)."""
+        s = t % self.slots
+        self.gp = self.gp.at[s].set(gp_new)
+        for name, new in (("ui", ui), ("vj", vj), ("due", due)):
+            arr = getattr(self, name).copy()
+            arr[s] = new.reshape(-1)
+            setattr(self, name, arr)

@@ -1,0 +1,123 @@
+"""Crash-consistent training checkpoints for `dmf.fit`.
+
+A resumable snapshot needs more than the factors: bit-identical
+resume-after-crash requires the FULL loop state —
+
+* the `DMFState` factors (saved UNPADDED: the sharded epochs re-pad and
+  re-place rows every epoch, so an unpadded snapshot restores onto any
+  mesh width, and the padded rows are provably zero anyway);
+* the numpy `Generator` stream (`bit_generator.state` is a plain JSON
+  dict), so every later epoch re-samples the same minibatches, negatives,
+  and per-epoch DP seeds;
+* the `DelayRing` of in-flight stale messages, so stragglers' buffered
+  gradients still land on their due epoch;
+* the `GaussianAccountant` ledger, so ε keeps composing from the realized
+  participation observed before the crash.
+
+Given those, every epoch function is a pure function of (state, sampled
+stream), and the DP noise is counter-keyed by (epoch seed, row id) rather
+than by an ambient rng — so replaying from a snapshot reproduces the
+uninterrupted run bit-for-bit (tests/test_robustness.py pins it, DP and
+churn on, single-device and sharded).
+
+Layout: ``<root>/step_<t>/`` with the arrays in the `checkpoint.ckpt`
+manifest format plus a ``training_state.json`` sidecar for the scalars
+(step, rng state, loss history, accountant counters).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+SIDECAR = "training_state.json"
+
+
+def _array_tree(state, ring, accountant):
+    tree = {"state": {"U": state.U, "P": state.P, "Q": state.Q}}
+    if ring is not None:
+        tree["ring"] = {"gp": ring.gp, "ui": ring.ui, "vj": ring.vj,
+                        "due": ring.due}
+    if accountant is not None:
+        tree["accountant"] = {"rdp": accountant._rdp,
+                              "messages": accountant.messages}
+    return tree
+
+
+def save_training(root, step: int, state, rng: np.random.Generator,
+                  ring=None, accountant=None, train_losses=(),
+                  test_losses=()) -> pathlib.Path:
+    """Snapshot the full training loop after ``step`` completed epochs.
+    ``state`` must be unpadded (global learner axis) — `dmf.fit` unpads
+    sharded state before calling."""
+    path = pathlib.Path(root) / f"step_{step}"
+    ckpt.save(path, _array_tree(state, ring, accountant), step=step)
+    meta = {
+        "step": int(step),
+        "rng_state": rng.bit_generator.state,
+        "train_losses": [float(x) for x in train_losses],
+        "test_losses": [float(x) for x in test_losses],
+        "has_ring": ring is not None,
+        "accountant": None if accountant is None else {
+            "epochs": int(accountant.epochs),
+            "eps_trajectory": [float(e) for e in accountant.eps_trajectory],
+        },
+    }
+    (path / SIDECAR).write_text(json.dumps(meta, indent=1))
+    return path
+
+
+def resolve_step_dir(path) -> pathlib.Path:
+    """Accept either a ``step_<t>`` directory or a checkpoint root (picks
+    the latest step under it)."""
+    path = pathlib.Path(path)
+    if (path / SIDECAR).exists():
+        return path
+    step = ckpt.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no training checkpoints under {path}")
+    return path / f"step_{step}"
+
+
+def load_training(path, like_state, ring=None, accountant=None):
+    """Restore a `save_training` snapshot.
+
+    ``like_state``/``ring``/``accountant`` provide the restore shapes (and,
+    for ring/accountant, the objects mutated in place — pass the same
+    freshly-constructed objects `fit` would otherwise start from).
+    Returns ``(state, rng, ring, step, train_losses, test_losses)``.
+    """
+    from repro.core import dmf as dmf_lib
+
+    path = resolve_step_dir(path)
+    meta = json.loads((path / SIDECAR).read_text())
+    if meta["has_ring"] != (ring is not None):
+        raise ValueError(
+            f"checkpoint at {path} was written with has_ring="
+            f"{meta['has_ring']} but resume constructed ring={ring}")
+    out = ckpt.restore(path, _array_tree(like_state, ring, accountant))
+    state = dmf_lib.DMFState(
+        U=jnp.asarray(out["state"]["U"]),
+        P=jnp.asarray(out["state"]["P"]),
+        Q=jnp.asarray(out["state"]["Q"]),
+    )
+    if ring is not None:
+        ring.gp = jnp.asarray(out["ring"]["gp"])
+        ring.ui = np.asarray(out["ring"]["ui"])
+        ring.vj = np.asarray(out["ring"]["vj"])
+        ring.due = np.asarray(out["ring"]["due"])
+    if accountant is not None:
+        acc = meta["accountant"]
+        assert acc is not None, "checkpoint has no accountant ledger"
+        accountant._rdp[:] = np.asarray(out["accountant"]["rdp"])
+        accountant.messages[:] = np.asarray(out["accountant"]["messages"])
+        accountant.epochs = int(acc["epochs"])
+        accountant.eps_trajectory = [float(e) for e in acc["eps_trajectory"]]
+    rng = np.random.default_rng()
+    rng.bit_generator.state = meta["rng_state"]
+    return (state, rng, ring, int(meta["step"]),
+            list(meta["train_losses"]), list(meta["test_losses"]))

@@ -56,6 +56,9 @@ class ServingConfig:
     n_shards: int = 1        # learner-mesh width: >1 serves row-sharded
                              # U/V/seen, one SPMD dispatch per microbatch
                              # of `microbatch` requests PER SHARD
+    fallback: bool = True    # graceful degradation: unknown/cold users and
+                             # empty candidate buckets get a popularity
+                             # slate (flagged) instead of garbage scores
 
 
 @dataclasses.dataclass
@@ -64,6 +67,7 @@ class EngineStats:
     n_dispatches: int = 0
     n_refreshes: int = 0
     n_events: int = 0
+    n_fallbacks: int = 0
     dispatch_seconds: list[float] = dataclasses.field(default_factory=list)
 
     def reset(self) -> None:
@@ -159,9 +163,22 @@ class ServingEngine:
         if seen is None:
             assert train is not None, "need `train` pairs or a `seen` mask"
             seen = metrics_lib.masks_from_interactions(I, J, train)
-        self.seen = jnp.asarray(np.asarray(seen).astype(np.int8))
+        seen_np = np.asarray(seen).astype(bool)
+        self.seen = jnp.asarray(seen_np.astype(np.int8))
         self._bucket_items = jnp.asarray(index.bucket_items)
         self._user_bucket = jnp.asarray(index.user_bucket)
+        # graceful-degradation state (host-side, cheap): which requests
+        # cannot be served from learned factors — unknown ids, cold-start
+        # users (no interactions => their zero-init item factors score
+        # garbage), users whose home-city candidate bucket is empty — and
+        # the popularity-ranked slate they get instead (check-in counts
+        # from the seen-filter, kept fresh by `ingest`).
+        self._n_users = I
+        self._cold = ~seen_np.any(axis=1)
+        self._item_counts = seen_np.sum(axis=0).astype(np.int64)
+        self._user_bucket_np = np.asarray(index.user_bucket)
+        self._bucket_empty = (np.asarray(index.bucket_items) < 0).all(axis=1)
+        self._refresh_popularity()
         self._sharded = cfg.n_shards > 1
         if self._sharded:
             # learner-sharded serving: the served views live row-sharded on
@@ -193,6 +210,28 @@ class ServingEngine:
         self._rng = np.random.default_rng(
             dmf_cfg.seed if dmf_cfg is not None else 0)
         self.stats = EngineStats()
+
+    # -------------------------------------------------------------- fallback
+    def _refresh_popularity(self) -> None:
+        """Rebuild the popularity slate: top-k items by check-in count,
+        values = count / max count (a [0,1] pseudo-score, deliberately NOT
+        on the factor-score scale — fallback responses are flagged)."""
+        top = np.argsort(-self._item_counts, kind="stable")
+        self._pop_items = top[: self.cfg.k].astype(np.int32)
+        peak = max(int(self._item_counts.max()), 1)
+        self._pop_vals = (
+            self._item_counts[self._pop_items] / peak).astype(np.float32)
+
+    def _fallback_mask(self, user_ids: np.ndarray) -> np.ndarray:
+        """Per-request bool mask: True where the learned-factor path cannot
+        produce a meaningful slate and the popularity fallback applies."""
+        uids = np.asarray(user_ids)
+        unknown = (uids < 0) | (uids >= self._n_users)
+        safe = np.clip(uids, 0, self._n_users - 1)
+        flags = unknown | self._cold[safe]
+        if self.cfg.prune:
+            flags = flags | self._bucket_empty[self._user_bucket_np[safe]]
+        return flags
 
     # ------------------------------------------------------------------ serve
     def _microbatches(self, user_ids: Iterable[int]) -> Iterator[tuple[np.ndarray, int]]:
@@ -293,20 +332,40 @@ class ServingEngine:
             self.stats.n_requests += n
             yield buf[:n], np.asarray(vals)[:n], np.asarray(idx)[:n]
 
-    def recommend(self, user_ids) -> tuple[np.ndarray, np.ndarray]:
+    def recommend(self, user_ids, return_flags: bool = False):
         """Convenience: serve a whole batch of user ids, results aligned to
-        the input order (also in sharded mode)."""
+        the input order (also in sharded mode).
+
+        Graceful degradation (``cfg.fallback``, on by default): requests the
+        factor path cannot serve — unknown ids, cold-start users, empty
+        candidate buckets — return the popularity slate instead of garbage;
+        their ids are clamped to row 0 before dispatch (essential in
+        sharded mode, where an out-of-range id would route to no shard) and
+        the dispatched rows are overwritten. ``return_flags=True`` appends
+        the per-request fallback bool mask to the result."""
         user_ids = np.asarray(user_ids)
+        k = self.cfg.k
         if len(user_ids) == 0:
-            k = self.cfg.k
-            return (np.empty((0, k), np.float32), np.empty((0, k), np.int32))
+            out = (np.empty((0, k), np.float32), np.empty((0, k), np.int32))
+            return out + (np.empty(0, bool),) if return_flags else out
+        flags = (self._fallback_mask(user_ids) if self.cfg.fallback
+                 else np.zeros(len(user_ids), bool))
+        safe_ids = np.where(flags, 0, user_ids)
         if self._sharded:
-            return self._serve_sharded(user_ids.astype(np.int64))
-        vals, idx = [], []
-        for _, v, i in self.serve_stream(int(u) for u in user_ids):
-            vals.append(v)
-            idx.append(i)
-        return np.concatenate(vals), np.concatenate(idx)
+            vals, idx = self._serve_sharded(safe_ids.astype(np.int64))
+        else:
+            vals, idx = [], []
+            for _, v, i in self.serve_stream(int(u) for u in safe_ids):
+                vals.append(v)
+                idx.append(i)
+            vals, idx = np.concatenate(vals), np.concatenate(idx)
+        if flags.any():
+            vals[flags] = self._pop_vals
+            idx[flags] = self._pop_items
+            self.stats.n_fallbacks += int(flags.sum())
+        if return_flags:
+            return vals, idx, flags
+        return vals, idx
 
     @property
     def requests_per_sec(self) -> float:
@@ -348,6 +407,12 @@ class ServingEngine:
             if len(events):
                 self._seen_sh = self._seen_sh.at[
                     events[:, 0], events[:, 1]].set(1)
+        if len(events):
+            # keep the degradation state fresh: a user with a first
+            # check-in stops being cold, and popularity tracks the stream
+            np.add.at(self._item_counts, events[:, 1].astype(np.int64), 1)
+            self._cold[events[:, 0].astype(np.int64)] = False
+            self._refresh_popularity()
         self.stats.n_refreshes += 1
         self.stats.n_events += int(len(events))
         return report

@@ -138,7 +138,7 @@ def make_shard_plan(nbr: graph_lib.NeighborTable, cfg: dmf_lib.DMFConfig) -> Sha
 # ---------------------------------------------------------------------------
 def shard_batches(
     ui: np.ndarray, vj: np.ndarray, r: np.ndarray, conf: np.ndarray,
-    n_shards: int, rows: int, cap_multiple: int = 32,
+    n_shards: int, rows: int, cap_multiple: int = 32, extras=(),
 ):
     """Route (nb, B) minibatch rows to their user's home shard.
 
@@ -154,6 +154,10 @@ def shard_batches(
     slot in the unsharded stream) — the DP mechanism keys its counter
     noise by it, which is what makes the noised sharded epoch invariant to
     the shard count (kernels/dp_noise.py).
+
+    ``extras``: additional (nb, B) per-row float arrays (e.g. the churn
+    path's fault gates) routed identically with fill 0, appended to the
+    returned tuple in order.
     """
     nb, B = ui.shape
     shard = ui // rows                              # (nb, B)
@@ -179,7 +183,9 @@ def shard_batches(
     conf_s = route(conf.astype(np.float32))
     valid = (np.arange(Bs)[None, None, :] < counts[:, :, None]).astype(np.float32)
     rid = route(np.arange(nb * B, dtype=np.int32).reshape(nb, B))
-    return ui_l, vj_s, r_s, conf_s, valid, rid
+    routed_extras = tuple(
+        route(np.asarray(x, np.float32)) for x in extras)
+    return (ui_l, vj_s, r_s, conf_s, valid, rid) + routed_extras
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +216,8 @@ def build_outbox(gp, tbl_idx, tbl_wgt, vj):
 
 
 def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
-                          cfg: dmf_lib.DMFConfig):
+                          cfg: dmf_lib.DMFConfig, prop_now=None,
+                          online_local=None):
     """One minibatch of Alg. 1 on one shard: local gathers + Eq. 9-11 via
     the SAME `dmf._step_deltas` as the single-device paths (the equivalence
     suite leans on that), local U/Q scatters, and the cross-shard P-gradient
@@ -225,7 +232,15 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     what the single-device scan adds, whatever shard the row landed on.
     The PR 3 privacy invariant (outbox = pure function of the message +
     static tables) is preserved with ``gp`` simply replaced by its DP
-    release."""
+    release.
+
+    Fault gates (robustness/faults.py; both None on the fault-free path):
+    ``prop_now`` (B,) restricts a straggler row's scatter to the sender's
+    own self slot (dest shard == me AND local row == sender), pre-outbox —
+    its neighbor deliveries come from the delay ring later; ``online_local``
+    (rows,) zeroes received weights into this shard's offline rows.
+    Returns the released message block ``gp`` too (the churn epoch buffers
+    it); the fault-free epoch discards it."""
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
         du, gp, dq, loss = dmf_lib._step_deltas_dp(
@@ -239,14 +254,23 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     if cfg.mode != "ldmf":
         # lines 11 + 13-15 across shards: gather the batch senders' rows of
         # the destination-partitioned table, exchange, scatter locally.
-        out_w, out_i, out_g, out_v = build_outbox(gp, pidx[ui], pwgt[ui], vj)
+        pi, pw = pidx[ui], pwgt[ui]                  # (B, D, S)
+        if prop_now is not None:
+            me = jax.lax.axis_index(AXIS)
+            D = pi.shape[1]
+            selfm = ((jnp.arange(D)[None, :, None] == me)
+                     & (pi == ui[:, None, None])).astype(pw.dtype)
+            pw = pw * jnp.maximum(prop_now[:, None, None], selfm)
+        out_w, out_i, out_g, out_v = build_outbox(gp, pi, pw, vj)
         rw = jax.lax.all_to_all(out_w, AXIS, 0, 0)   # (D, B, S) source-major
         ri = jax.lax.all_to_all(out_i, AXIS, 0, 0)
         rg = jax.lax.all_to_all(out_g, AXIS, 0, 0)   # (D, B, K)
         rv = jax.lax.all_to_all(out_v, AXIS, 0, 0)   # (D, B)
+        if online_local is not None:
+            rw = rw * online_local[ri]               # offline receivers get 0
         upd = rw[..., None] * rg[:, :, None, :]      # (D, B, S, K)
         P = P.at[ri, rv[:, :, None]].add(-theta * upd)
-    return U, P, Q, loss
+    return U, P, Q, loss, gp
 
 
 @functools.partial(
@@ -281,7 +305,7 @@ def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
         def body(carry, batch):
             U, P, Q = carry
             b_ui, b_vj, b_r, b_conf, b_val, b_rid = batch
-            U, P, Q, loss = _sharded_batch_update(
+            U, P, Q, loss, _ = _sharded_batch_update(
                 U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
                 Z[b_rid] if noise_on else None, cfg)
             return (U, P, Q), loss
@@ -298,6 +322,159 @@ def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
         out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS)),
         check_vma=False,
     )(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "mesh", "use_ring"),
+    donate_argnums=(0, 1, 2))
+def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
+                         valid, rid, prop_now, online, ring_gp, ring_ui,
+                         ring_vj, ring_deliver, dp_seed, cfg, mesh, use_ring):
+    """`_epoch_sharded` under a fault schedule — STILL one SPMD dispatch.
+
+    Extra inputs: the fault gates (``prop_now`` routed like the batches,
+    ``online`` (I_pad,) row-sharded), the SAME partitioned table a second
+    time sharded by DESTINATION (``dpidx``/``dpwgt`` with spec
+    P(None, learners) → each shard holds every sender's receiver-list
+    destined for ITS rows — what stale-message delivery needs, no comms),
+    and the replicated delay-ring content. Start-of-epoch delivery scatters
+    each due buffered message into the local P rows (neighbor slots only,
+    receiver-online gated). The epoch's released messages are re-assembled
+    into a replicated (n, K) stream block for the ring: each shard scatters
+    its routed rows' gp by global stream id, then one `psum` (padded rows
+    carry gp=0/rid=0 — they add zero). Returns (U, P, Q, losses, block).
+
+    Under the trivial schedule (gates all ones, ``use_ring=False``) every
+    fault op multiplies by 1.0 — the outputs are bitwise `_epoch_sharded`'s.
+    """
+    from repro.privacy import mechanism
+    noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
+    theta = cfg.lr
+
+    def shard_body(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf, valid,
+                   rid, prop_now, online, ring_gp, ring_ui, ring_vj,
+                   ring_deliver, dp_seed):
+        ui, vj, r, conf, valid, rid, prop_now = (
+            x[:, 0] for x in (ui, vj, r, conf, valid, rid, prop_now))
+        rows = U.shape[0]
+        K = U.shape[-1]
+        me = jax.lax.axis_index(AXIS)
+        if use_ring:
+            # deliver the buffered messages due THIS epoch into local P rows
+            gflat = ring_gp.reshape(-1, K)               # (L·n, K)
+            di = dpidx[ring_ui, 0]                       # (L·n, S) local rows
+            dw = dpwgt[ring_ui, 0]
+            selfm = ((me * rows + di) == ring_ui[:, None]).astype(dw.dtype)
+            dw = (dw * (1.0 - selfm) * online[di]
+                  * ring_deliver[:, None])
+            P = P.at[di, ring_vj[:, None]].add(
+                -theta * dw[:, :, None] * gflat[:, None, :])
+        if noise_on:
+            from repro.kernels.dp_noise import gauss_counter
+            nb = ui.shape[0]
+            all_rid = jnp.arange(
+                nb * cfg.batch_size, dtype=jnp.int32).reshape(-1, 1)
+            Z = mechanism.noise_std(cfg) * gauss_counter(dp_seed, all_rid, K)
+
+        def body(carry, batch):
+            U, P, Q = carry
+            b_ui, b_vj, b_r, b_conf, b_val, b_rid, b_prop = batch
+            U, P, Q, loss, gp = _sharded_batch_update(
+                U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
+                Z[b_rid] if noise_on else None, cfg,
+                prop_now=b_prop, online_local=online)
+            return (U, P, Q), ((loss, gp) if use_ring else loss)
+
+        (U, P, Q), ys = jax.lax.scan(
+            body, (U, P, Q), (ui, vj, r, conf, valid, rid, prop_now))
+        if use_ring:
+            losses, gps = ys
+            # replicated released-message stream block for the delay ring:
+            # scatter-add my rows by global stream id, psum across shards
+            n_stream = ui.shape[0] * cfg.batch_size
+            blk = jnp.zeros((n_stream, K), gps.dtype)
+            blk = blk.at[rid.reshape(-1)].add(gps.reshape(-1, K))
+            blk = jax.lax.psum(blk, AXIS)
+        else:
+            losses = ys
+            blk = jnp.zeros((1, K), jnp.float32)
+        return U, P, Q, losses[:, None], blk
+
+    return shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS),
+                  P_(None, AXIS), P_(None, AXIS),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
+                  P_(None, AXIS), P_(AXIS),
+                  P_(), P_(), P_(), P_(), P_()),
+        out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS), P_()),
+        check_vma=False,
+    )(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf, valid, rid,
+      prop_now, online, ring_gp, ring_ui, ring_vj, ring_deliver, dp_seed)
+
+
+def train_epoch_churn_sharded(
+    state: dmf_lib.DMFState,
+    prop,
+    train: np.ndarray,
+    cfg: dmf_lib.DMFConfig,
+    rng: np.random.Generator,
+    t: int,
+    schedule,                   # robustness.faults.ChurnPlan
+    ring,                       # robustness.faults.DelayRing | None
+    accountant=None,
+) -> tuple[dmf_lib.DMFState, float]:
+    """Sharded counterpart of `dmf.train_epoch_churn`: the same sampled
+    stream and fault gates (host-side, shard-count-independent), rows and
+    gates routed to home shards, one SPMD dispatch per epoch. The delay
+    ring is replicated — its written content is the psum-assembled global
+    released-message stream, so a run's ring state is invariant to the
+    mesh width (and a resume can switch shard counts)."""
+    plan = _as_plan(prop, cfg)
+    ui, vj, r, conf = dmf_lib.sample_epoch(train, cfg, rng)
+    B = cfg.batch_size
+    nb = len(ui) // B
+    n = nb * B
+    shape = (nb, B)
+    ui2 = ui[:n].reshape(shape)
+    vj2 = vj[:n].reshape(shape)
+    _, dp_seed = dmf_lib.epoch_dp_inputs(cfg, rng, n)
+    on, sender_on, prop_now, due = schedule.epoch_row_masks(t, ui2)
+    conf2 = conf[:n].reshape(shape) * sender_on
+    if accountant is not None:
+        accountant.observe_epoch(ui2, valid=sender_on)
+    ui_l, vj_s, r_s, conf_s, valid, rid, son_s, pnow_s = shard_batches(
+        ui2, vj2, r[:n].reshape(shape), conf2, cfg.n_shards, plan.rows,
+        extras=(sender_on, prop_now))
+    valid = valid * son_s       # offline senders' routed rows are inert
+    online_pad = np.zeros(plan.n_rows_padded, np.float32)
+    online_pad[: schedule.n_users] = on
+    use_ring = ring is not None
+    if use_ring:
+        r_ui = ring.ui.reshape(-1)
+        r_vj = ring.vj.reshape(-1)
+        r_del = (ring.due.reshape(-1) == t).astype(np.float32)
+        ring_gp = ring.gp
+    else:  # statically-skipped dummies (dead jit inputs)
+        r_ui = np.zeros(1, np.int32)
+        r_vj = np.zeros(1, np.int32)
+        r_del = np.zeros(1, np.float32)
+        ring_gp = jnp.zeros((1, 1, cfg.dim), jnp.float32)
+    st = shard_state(state, plan)
+    U, Pm, Q, losses, blk = _epoch_sharded_churn(
+        st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
+        plan.part.idx, plan.part.wgt,
+        jnp.asarray(ui_l), jnp.asarray(vj_s), jnp.asarray(r_s),
+        jnp.asarray(conf_s), jnp.asarray(valid), jnp.asarray(rid),
+        jnp.asarray(pnow_s), jnp.asarray(online_pad),
+        ring_gp, jnp.asarray(r_ui), jnp.asarray(r_vj), jnp.asarray(r_del),
+        jnp.asarray(dp_seed, jnp.int32), cfg, plan.mesh, use_ring)
+    if use_ring:
+        ring.write(t, blk, ui2, vj2, due)
+    total = float(np.asarray(losses, dtype=np.float64).sum())
+    realized = int(sender_on.sum())
+    return dmf_lib.DMFState(U, Pm, Q), total / max(realized, 1)
 
 
 def _as_plan(prop, cfg: dmf_lib.DMFConfig) -> ShardPlan:

@@ -29,6 +29,7 @@ RUN_SECTIONS = {
     "dmf_train": "benchmarks.dmf_train_bench",
     "serving": "benchmarks.serving_bench",
     "privacy": "benchmarks.privacy_bench",
+    "robustness": "benchmarks.churn_bench",
     "complexity": "benchmarks.complexity",
     "gossip_ablation": "benchmarks.gossip_ablation",
     "perf_report": "benchmarks.perf_report",
@@ -156,6 +157,39 @@ def test_bench_privacy_tiny_schema(bench_outdir):
         json.dumps(res, default=float))
 
 
+def test_bench_churn_tiny_schema(bench_outdir):
+    from benchmarks import churn_bench
+
+    res = churn_bench.main(tiny=True, n_timed=1, epochs=4)
+    for key in ("config", "grid", "late_join", "resume", "epochs_per_sec",
+                "churn_overhead_vs_base", "checkpoint_overhead_vs_base"):
+        assert key in res, key
+    grid = res["grid"]
+    assert len(grid) == (len(res["config"]["dropout_grid"])
+                         * len(res["config"]["staleness_grid"]))
+    # the (0, 0) anchor runs the trivial-plan churn path: exactly fault-free
+    anchor = grid[0]
+    assert anchor["dropout"] == 0 and anchor["k_max"] == 0
+    assert anchor["participation_rate"] == 1.0
+    assert anchor["loss_gap_vs_faultfree"] == 0.0, (
+        "trivial churn plan drifted from the plain run")
+    for row in grid:
+        for m in ("participation_rate", "train_loss_final",
+                  "test_loss_final", "P@5", "R@10", "loss_gap_vs_faultfree"):
+            assert m in row, m
+        assert 0.0 < row["participation_rate"] <= 1.0
+    # dropout really reduced realized participation along the grid
+    assert grid[-1]["participation_rate"] < grid[0]["participation_rate"]
+    assert res["late_join"]["late_frac"] == 0.25
+    # acceptance: crash-resume with DP on is bit-identical
+    assert res["resume"]["bit_identical_with_dp"] is True
+    for k in ("sparse_scan", "churn_path", "checkpoint_every_epoch"):
+        assert res["epochs_per_sec"][k] > 0
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_churn", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
 def test_run_only_parsing_validates_sections():
     from benchmarks import run as run_mod
 
@@ -193,5 +227,5 @@ def test_bench_mains_accept_full_flag():
         params = inspect.signature(fn).parameters
         if section in ("paper_tables", "convergence", "reg_sweep",
                        "walk_sweep", "dmf_train", "serving", "privacy",
-                       "complexity"):
+                       "robustness", "complexity"):
             assert "full" in params, f"{module}.main lost full="

@@ -250,6 +250,47 @@ def test_accountant_tracks_realized_participation():
     assert acc.eps_trajectory[1] > acc.eps_trajectory[0]
 
 
+def test_accountant_partial_participation_masking():
+    """Churn-path accounting (robustness/faults.py feeds ``valid``): rows
+    masked out released nothing and must not be charged."""
+    acc_full = GaussianAccountant(n_users=6, sigma=1.0)
+    acc_mask = GaussianAccountant(n_users=6, sigma=1.0)
+    acc_true = GaussianAccountant(n_users=6, sigma=1.0)
+    ui = np.asarray([[0, 0, 1, 2], [0, 3, 3, 3]])
+    valid = np.asarray([[True, True, True, False],   # learner 2 offline
+                        [False, True, True, True]])  # one of 0's rows masked
+    acc_full.observe_epoch(ui)
+    acc_mask.observe_epoch(ui, valid=valid)
+    acc_true.observe_epoch(ui, valid=np.ones_like(valid))
+    ef, _ = acc_full.epsilon()
+    em, _ = acc_mask.epsilon()
+    et, _ = acc_true.epsilon()
+    # all-True mask is literally the unmasked ledger
+    np.testing.assert_array_equal(et, ef)
+    np.testing.assert_array_equal(acc_true.messages, acc_full.messages)
+    # fully-masked learner: zero releases, exactly eps = 0
+    assert acc_mask.messages[2] == 0 and em[2] == 0.0
+    # epsilon is monotone in realized participation, per learner
+    assert (em <= ef).all()
+    assert em[0] < ef[0]                     # learner 0 lost a release
+    np.testing.assert_array_equal(
+        acc_mask.messages, [2, 1, 0, 3, 0, 0])
+
+
+def test_accountant_epsilon_monotone_as_mask_grows():
+    rng = np.random.default_rng(0)
+    ui = rng.integers(0, 8, size=(4, 16))
+    keep = rng.random((4, 16))
+    prev = np.full(8, np.inf)
+    for p in (1.0, 0.7, 0.4, 0.0):           # progressively more masking
+        acc = GaussianAccountant(n_users=8, sigma=1.0)
+        acc.observe_epoch(ui, valid=keep < p)
+        eps, _ = acc.epsilon()
+        assert (eps <= prev + 1e-12).all(), p
+        prev = eps
+    assert (prev == 0.0).all()               # nothing released at p=0
+
+
 # ---------------------------------------------------------------------------
 # Audit: noise kills the attacks
 # ---------------------------------------------------------------------------

@@ -182,7 +182,11 @@ def test_recommend_topk_peruser_all_seen():
 def test_engine_pruned_matches_serve_oracle_exactly():
     ds, nbr, cfg, state = _world()
     index = index_from_dataset(ds)
-    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+    # fallback=False: this is the raw factor-scoring kernel oracle — cold
+    # users must go through the same path (fallback exactness is covered by
+    # the dedicated fallback suite below)
+    eng = ServingEngine(state, index,
+                        ServingConfig(microbatch=16, k=5, fallback=False),
                         train=ds.train)
     users = np.random.default_rng(7).integers(0, ds.n_users, 53)
     vals, idx = eng.recommend(users)
@@ -202,7 +206,8 @@ def test_engine_equals_full_dense_oracle_where_topk_in_bucket():
     (indices and values), for users whose dense top-k fits the bucket."""
     ds, nbr, cfg, state = _world(epochs=10)
     index = index_from_dataset(ds)
-    eng = ServingEngine(state, index, ServingConfig(microbatch=32, k=5),
+    eng = ServingEngine(state, index,
+                        ServingConfig(microbatch=32, k=5, fallback=False),
                         train=ds.train)
     users = np.arange(ds.n_users)
     vals, idx = eng.recommend(users)
@@ -239,17 +244,24 @@ def test_engine_dense_path_matches_peruser_kernel():
 
 
 def test_engine_never_recommends_seen_or_out_of_city():
+    """Serving contract under the default config: factor-scored users never
+    get a seen or out-of-city item; only cold users (no train interactions,
+    so no meaningful factors AND nothing 'seen') may receive the flagged
+    popularity slate, which is city-agnostic by design."""
     ds, nbr, cfg, state = _world()
     index = index_from_dataset(ds)
     eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=10),
                         train=ds.train)
     train_mask = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
     users = np.arange(ds.n_users)
-    _, idx = eng.recommend(users)
+    _, idx, flags = eng.recommend(users, return_flags=True)
+    cold = ~train_mask.any(axis=1)
+    np.testing.assert_array_equal(flags, cold)     # only cold users degrade
     for u in users:
         rec = idx[u][idx[u] >= 0]
         assert not train_mask[u, rec].any(), "seen item recommended"
-        assert (ds.item_city[rec] == ds.user_city[u]).all(), "out-of-city rec"
+        if not flags[u]:
+            assert (ds.item_city[rec] == ds.user_city[u]).all(), "out-of-city rec"
 
 
 # ----------------------------------------------------------- online refresh
@@ -389,6 +401,124 @@ def test_engine_ingest_user_in_truncated_bucket_keeps_index_intact():
         got = row[row >= 0]
         assert set(got.tolist()) <= bucket
         assert not seen[uu, got].any()
+
+
+# --------------------------------------------- graceful degradation fallback
+def _pop_slate(seen, k):
+    counts = np.asarray(seen).astype(bool).sum(axis=0)
+    items = np.argsort(-counts, kind="stable")[:k].astype(np.int32)
+    vals = (counts[items] / max(int(counts.max()), 1)).astype(np.float32)
+    return vals, items
+
+
+def test_fallback_unknown_and_cold_users_get_popularity_slate():
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    seen = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    cold = 7
+    seen[cold] = False                       # a user with zero interactions
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        seen=seen)
+    normal = int(np.flatnonzero(seen.any(1))[0])
+    users = np.asarray([cold, ds.n_users + 5, -1, normal])
+    vals, idx, flags = eng.recommend(users, return_flags=True)
+    np.testing.assert_array_equal(flags, [True, True, True, False])
+    pv, pi = _pop_slate(seen, 5)
+    for r in range(3):                       # flagged rows: popularity slate
+        np.testing.assert_array_equal(idx[r], pi)
+        np.testing.assert_array_equal(vals[r], pv)
+    assert eng.stats.n_fallbacks == 3
+    # the unflagged row is served from factors, identical to a clean batch
+    v1, i1 = eng.recommend(np.asarray([normal]))
+    np.testing.assert_array_equal(idx[3], i1[0])
+    np.testing.assert_array_equal(vals[3], v1[0])
+
+
+def test_fallback_empty_candidate_bucket():
+    """A user whose home city has no POIs: the pruned path has nothing to
+    score — fallback serves popularity; the dense (prune=False) path can
+    still score full-J and must NOT flag such users."""
+    ds, nbr, cfg, state = _world()
+    item_city = np.where(np.arange(ds.n_items) % 2 == 0, 0, 2)  # city 1 empty
+    user_city = np.zeros(ds.n_users, np.int64)
+    user_city[3] = 1
+    index = build_candidate_index(item_city, user_city, cap=128)
+    assert (np.asarray(index.bucket_items[1]) == -1).all()
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        train=ds.train)
+    vals, idx, flags = eng.recommend(np.asarray([3, 0]), return_flags=True)
+    np.testing.assert_array_equal(flags, [True, False])
+    pv, pi = _pop_slate(np.asarray(eng.seen), 5)
+    np.testing.assert_array_equal(idx[0], pi)
+    dense = ServingEngine(state, index,
+                          ServingConfig(microbatch=16, k=5, prune=False),
+                          train=ds.train)
+    _, _, dflags = dense.recommend(np.asarray([3, 0]), return_flags=True)
+    np.testing.assert_array_equal(dflags, [False, False])
+
+
+def test_fallback_disabled_serves_factors_unflagged():
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    seen = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    cold = 7
+    seen[cold] = False
+    eng = ServingEngine(state, index,
+                        ServingConfig(microbatch=16, k=5, fallback=False),
+                        seen=seen)
+    vals, idx, flags = eng.recommend(np.asarray([cold, 1]), return_flags=True)
+    assert not flags.any() and eng.stats.n_fallbacks == 0
+    # the cold row went through the factor path (whatever it scores), not
+    # the popularity slate
+    _, pi = _pop_slate(seen, 5)
+    on = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                       seen=seen)
+    ov, oi, oflags = on.recommend(np.asarray([cold, 1]), return_flags=True)
+    np.testing.assert_array_equal(oflags, [True, False])
+    np.testing.assert_array_equal(oi[0], pi)
+    np.testing.assert_array_equal(oi[1], idx[1])   # unflagged rows identical
+
+
+def test_ingest_clears_cold_status_and_tracks_popularity():
+    ds, nbr, cfg, state = _world(epochs=4)
+    index = index_from_dataset(ds)
+    seen = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    cold = 7
+    seen[cold] = False
+    eng = ServingEngine(state, index, ServingConfig(microbatch=16, k=5),
+                        seen=seen, nbr=nbr, dmf_cfg=cfg)
+    assert eng._fallback_mask(np.asarray([cold]))[0]
+    counts0 = eng._item_counts.copy()
+    j = int(np.asarray(index.bucket_items[index.user_bucket[cold]]).max())
+    eng.ingest(np.asarray([[cold, j]], np.int64))
+    # first check-in: no longer cold, served from factors now
+    _, _, flags = eng.recommend(np.asarray([cold]), return_flags=True)
+    assert not flags[0]
+    # popularity ledger tracked the stream
+    assert eng._item_counts[j] == counts0[j] + 1
+    assert eng._item_counts.sum() == counts0.sum() + 1
+
+
+@pytest.mark.sharded
+def test_fallback_sharded_matches_single_shard():
+    """Unknown ids are clamped to row 0 BEFORE dispatch (an out-of-range id
+    would route to no shard) — sharded fallback == single-shard fallback."""
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    seen = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    seen[7] = False
+    users = np.asarray([7, ds.n_users + 3, 0, 11, -2, 5])
+    e1 = ServingEngine(state, index, ServingConfig(microbatch=8, k=5),
+                       seen=seen)
+    e2 = ServingEngine(state, index,
+                       ServingConfig(microbatch=8, k=5, n_shards=2),
+                       seen=seen)
+    v1, i1, f1 = e1.recommend(users, return_flags=True)
+    v2, i2, f2 = e2.recommend(users, return_flags=True)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(v1, v2)
+    assert e2.stats.n_fallbacks == int(f1.sum()) > 0
 
 
 def test_online_refresh_padded_rows_are_exact_noops():
