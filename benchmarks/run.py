@@ -19,8 +19,8 @@ import time
 # silently running nothing
 SECTIONS = (
     "paper_tables", "convergence", "reg_sweep", "walk_sweep", "dmf_train",
-    "serving", "privacy", "robustness", "complexity", "gossip_ablation",
-    "perf_report", "kernels", "roofline",
+    "serving", "scheduler", "privacy", "robustness", "complexity",
+    "gossip_ablation", "perf_report", "kernels", "roofline",
 )
 
 
@@ -171,6 +171,38 @@ def main() -> None:
             f"{rps_sh or 'all_skipped'}"
         )
 
+    if want("scheduler"):
+        from benchmarks import scheduler_bench
+        _section("scheduler (continuous batching + SLO admission)")
+        t0 = time.perf_counter()
+        res = scheduler_bench.main(full=args.full)   # saves BENCH_scheduler
+        us = (time.perf_counter() - t0) * 1e6
+        for key, entry in res["grid"].items():
+            if "skipped" in entry:
+                print(f"scheduler_{key},0,skipped={entry['skipped']}")
+                continue
+            pts = ";".join(
+                f"x{row['offered_frac_of_capacity']}:"
+                f"goodput={row['scheduler']['goodput_rps']:.0f}rps:"
+                f"slo={row['scheduler']['slo_attainment']:.3f}:"
+                f"p50={row['scheduler']['latency_ms']['p50_ms']:.1f}ms"
+                for row in entry["loads"])
+            print(f"scheduler_{key},0,{pts};"
+                  f"bit_identical={entry['bit_identical_vs_direct']}")
+        p50 = res["p50_ms_at_max_shards"]
+        ing = res["ingest_interleave"]
+        print(
+            f"scheduler,{us:.0f},"
+            f"capacity={res['single_shard_capacity_rps']:.0f}rps;"
+            f"max_shards={res['max_shards_measured']};"
+            f"p50_sched={p50['scheduler']:.1f}ms;"
+            f"p50_lockstep={p50['lockstep']:.1f}ms;"
+            f"beats_lockstep={res['scheduler_beats_lockstep_p50_at_max_shards']};"
+            f"ingest_idle={ing['ingest_ran_in_idle_gap']};"
+            f"ingest_snapshots_exact="
+            f"{ing['pre_ingest_bit_identical_to_no_ingest'] and ing['post_ingest_bit_identical_to_ingested_snapshot']}"
+        )
+
     if want("privacy"):
         from benchmarks import privacy_bench
         _section("privacy (DP exchange: eps-utility frontier + audit)")
@@ -251,18 +283,15 @@ def main() -> None:
 
     if want("roofline"):
         from benchmarks import roofline
-        _section("roofline (from dry-run artifacts)")
+        _section("roofline (dry-run artifacts, analytic fallback)")
         rows = roofline.main()
         common.save_json("roofline", rows)
-        if not rows:
-            print("roofline,0,no dryrun artifacts — run "
-                  "`python -m repro.launch.dryrun --all` first")
         for r in rows:
             print(
                 f"roofline_{r['arch']}_{r['shape']},0,"
                 f"compute={r['t_compute_s']:.3e};memory={r['t_memory_s']:.3e};"
                 f"collective={r['t_collective_s']:.3e};dominant={r['dominant']};"
-                f"useful={r['useful_ratio']:.2f}"
+                f"useful={r['useful_ratio']:.2f};src={r['collective_source']}"
             )
 
 

@@ -1,0 +1,219 @@
+"""Continuous-batching scheduler benchmark: goodput under a p99 SLO.
+
+BENCH_serving measures *drain* throughput — hand the engine a request list,
+clock the wall time — and its sharded section shows the cost of that
+dispatch discipline: p50 latency balloons as shards go 1 → 8 because every
+request waits for the widest global lockstep batch. This bench puts the
+`scheduling.Scheduler` (per-shard independent dispatch + SLO admission) and
+the lockstep discipline (`scheduling.simulate_lockstep` — today's
+`ServingEngine` drain, measured per-request) on the SAME timestamped
+Poisson workloads and reports what a traffic engineer actually provisions
+by: **goodput under the SLO** (completed-within-deadline requests/sec),
+SLO attainment, rejection/expiry rates, and per-request p50/p95/p99 — per
+shard count {1, 2, 4, 8}, per offered load (fractions/multiples of the
+measured single-shard capacity).
+
+Also checks the scheduler's two correctness contracts on a live run:
+every served slate is bit-identical to a direct `ServingEngine.recommend`
+of the same user ids, and ingest interleaved into idle slots leaves slates
+bit-identical to the matching no-ingest / post-ingest factor snapshots.
+
+Writes ``BENCH_scheduler.json`` (repo root + benchmarks/results mirror).
+Sharded entries need host devices provisioned before jax starts:
+
+    PYTHONPATH=src python -m benchmarks.run --only scheduler --devices 8
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.scheduling import (Scheduler, SchedulerConfig, WorkloadConfig,
+                              generate, simulate_lockstep)
+from repro.serving import ServingConfig, ServingEngine, index_from_dataset
+
+
+def _build_engine(state, index, train, nbr, cfg, microbatch, n_shards):
+    eng = ServingEngine(
+        state, index,
+        ServingConfig(microbatch=microbatch, n_shards=n_shards),
+        train=train, nbr=nbr, dmf_cfg=cfg)
+    eng.serve_microbatch(np.arange(microbatch, dtype=np.int64))   # warm jit
+    if n_shards > 1:
+        eng.serve_wave(np.zeros((n_shards, microbatch), np.int32))
+    eng.stats.reset()
+    return eng
+
+
+def _measure_capacity(eng, n_users, reps: int = 5) -> float:
+    """Single-queue capacity: requests/sec of back-to-back full microbatch
+    dispatches — the scale the offered-load grid hangs off."""
+    R = eng.cfg.microbatch
+    rng = np.random.default_rng(7)
+    dts = []
+    for _ in range(reps):
+        *_, dt = eng.serve_microbatch(rng.integers(0, n_users, R))
+        dts.append(dt)
+    return R / float(np.median(dts))
+
+
+def _bit_identical(report, state, index, train, nbr, cfg, microbatch,
+                   n_shards) -> bool:
+    """Every served slate == a fresh engine's direct recommend of the same
+    ids (fresh engine: the scheduler's engine accumulated no state, but this
+    also proves no hidden dependence on scheduler-side dispatch order)."""
+    served = report.served()
+    if not served:
+        return False
+    eng = ServingEngine(
+        state, index,
+        ServingConfig(microbatch=microbatch, n_shards=n_shards),
+        train=train, nbr=nbr, dmf_cfg=cfg)
+    vals, idx, flags = eng.recommend([r.user for r in served],
+                                     return_flags=True)
+    return bool(all(
+        (r.vals == vals[j]).all() and (r.idx == idx[j]).all()
+        and r.fallback == bool(flags[j])
+        for j, r in enumerate(served)))
+
+
+def _ingest_interleave_section(state, index, ds, nbr, cfg, microbatch,
+                               slo_ms) -> dict:
+    """Two request bursts with an idle gap; one ingest window of held-out
+    check-ins. The scheduler must run the refresh INSIDE the gap (never
+    blocking a queued request) and stay snapshot-consistent: burst-1 slates
+    == no-ingest engine, burst-2 slates == engine after the same ingest."""
+    from repro.scheduling.workload import make_requests
+
+    rng = np.random.default_rng(3)
+    n_half = 48
+    users = rng.integers(0, ds.n_users, 2 * n_half)
+    t1 = np.sort(rng.uniform(0.0, 0.02, n_half))
+    # generous idle gap: the first ingest window pays the online-refresh jit
+    # compile, which must still land inside the gap on the virtual clock
+    t2 = 5.0 + np.sort(rng.uniform(0.0, 0.02, n_half))
+    reqs = make_requests(np.concatenate([t1, t2]), users, slo_ms)
+    events = ds.test[:32].astype(np.int64)
+
+    eng = _build_engine(state, index, ds.train, nbr, cfg, microbatch, 1)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs, ingest_events=[events])
+    served = rep.served()
+    pre = [r for r in served if r.ingest_epoch == 0]
+    post = [r for r in served if r.ingest_epoch == 1]
+
+    eng_no = ServingEngine(state, index, ServingConfig(microbatch=microbatch),
+                           train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    v0, i0 = eng_no.recommend([r.user for r in pre])
+    pre_ok = bool(all((r.vals == v0[j]).all() and (r.idx == i0[j]).all()
+                      for j, r in enumerate(pre)))
+    eng_in = ServingEngine(state, index, ServingConfig(microbatch=microbatch),
+                           train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    eng_in.ingest(events)
+    v1, i1 = eng_in.recommend([r.user for r in post])
+    post_ok = bool(all((r.vals == v1[j]).all() and (r.idx == i1[j]).all()
+                       for j, r in enumerate(post)))
+    gap_start, gap_end = float(t1[-1]), 5.0
+    in_gap = bool(all(gap_start <= s and e <= gap_end + 1e-9
+                      for s, e in rep.ingest_intervals)) \
+        if rep.ingest_intervals else False
+    return {
+        "n_windows_run": rep.n_ingest_windows,
+        "n_pre_ingest_served": len(pre),
+        "n_post_ingest_served": len(post),
+        "ingest_ran_in_idle_gap": in_gap,
+        "pre_ingest_bit_identical_to_no_ingest": pre_ok,
+        "post_ingest_bit_identical_to_ingested_snapshot": post_ok,
+    }
+
+
+def main(full: bool = False, tiny: bool = False) -> dict:
+    import jax
+
+    if tiny:
+        ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+            n_users=128, n_items=96, n_ratings=900, n_cities=4))
+        epochs, microbatch, n_requests = 6, 16, 120
+        shard_counts = (1, 2)
+    else:
+        ds = synthetic_poi.foursquare_like(reduced=not full)
+        epochs = 40 if full else 20
+        microbatch, n_requests = 64, 1024 if full else 512
+        shard_counts = (1, 2, 4, 8)
+    slo_ms = 50.0
+    load_fracs = (0.5, 1.0, 2.0)     # × measured single-shard capacity
+
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+    state = dmf.fit(cfg, ds.train, nbr, epochs=epochs).state
+    index = index_from_dataset(ds)
+    n_devices = len(jax.devices())
+
+    eng1 = _build_engine(state, index, ds.train, nbr, cfg, microbatch, 1)
+    capacity = _measure_capacity(eng1, ds.n_users)
+    loads = [f * capacity for f in load_fracs]
+
+    res = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items,
+            "microbatch": microbatch, "n_requests": n_requests,
+            "slo_ms": slo_ms, "n_devices": n_devices,
+            "load_fracs_of_capacity": list(load_fracs),
+            "workload": "poisson × power-law users",
+        },
+        "single_shard_capacity_rps": capacity,
+        "grid": {},
+    }
+    mid = len(loads) // 2
+    p50s = {}
+    for n_shards in shard_counts:
+        key = f"shards_{n_shards}"
+        if n_shards > n_devices:
+            res["grid"][key] = {"skipped": f"{n_devices} devices"}
+            continue
+        eng = (eng1 if n_shards == 1 else _build_engine(
+            state, index, ds.train, nbr, cfg, microbatch, n_shards))
+        entry = {"loads": [], "bit_identical_vs_direct": None}
+        for li, load in enumerate(loads):
+            wl = WorkloadConfig(
+                n_requests=n_requests, rate_rps=load, slo_ms=slo_ms,
+                users="powerlaw", seed=100 + li)
+            reqs = generate(wl, ds.n_users)
+            rep_s = Scheduler(eng, SchedulerConfig()).run(reqs)
+            rep_l = simulate_lockstep(eng, reqs)
+            row = {
+                "offered_load_rps": load,
+                "offered_frac_of_capacity": load_fracs[li],
+                "scheduler": rep_s.summary(slo_ms=slo_ms),
+                "lockstep": rep_l.summary(slo_ms=slo_ms),
+            }
+            entry["loads"].append(row)
+            if li == mid:
+                entry["bit_identical_vs_direct"] = _bit_identical(
+                    rep_s, state, index, ds.train, nbr, cfg, microbatch,
+                    n_shards)
+                p50s[n_shards] = (
+                    row["scheduler"]["latency_ms"]["p50_ms"],
+                    row["lockstep"]["latency_ms"]["p50_ms"])
+        res["grid"][key] = entry
+
+    max_d = max(p50s)
+    res["max_shards_measured"] = max_d
+    res["p50_ms_at_max_shards"] = {
+        "scheduler": p50s[max_d][0], "lockstep": p50s[max_d][1]}
+    res["scheduler_beats_lockstep_p50_at_max_shards"] = bool(
+        p50s[max_d][0] < p50s[max_d][1])
+    res["ingest_interleave"] = _ingest_interleave_section(
+        state, index, ds, nbr, cfg, microbatch, slo_ms)
+    common.save_json("BENCH_scheduler", res)   # mirrors to repo root
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

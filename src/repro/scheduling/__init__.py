@@ -1,0 +1,29 @@
+# Scheduling subsystem: continuous-batching request serving over ServingEngine.
+#   workload.py  — arrival-process load generators (Poisson, bursty on/off,
+#                  trace replay; uniform / power-law user popularity) + CLI
+#   scheduler.py — per-shard waiting queues, SLO/priority admission control,
+#                  independent microbatch dispatch, ingest interleaving,
+#                  and the lockstep global-batch baseline
+#   metrics.py   — per-request (arrival→completion) records, queue gauges,
+#                  goodput under a p99 SLO
+from repro.scheduling.metrics import (QueueGauge, RequestRecord,
+                                      latency_percentiles, summarize)
+from repro.scheduling.scheduler import (Scheduler, SchedulerConfig,
+                                        SchedulerReport, simulate_lockstep)
+from repro.scheduling.workload import (Request, WorkloadConfig, generate,
+                                       replay)
+
+__all__ = [
+    "QueueGauge",
+    "Request",
+    "RequestRecord",
+    "Scheduler",
+    "SchedulerConfig",
+    "SchedulerReport",
+    "WorkloadConfig",
+    "generate",
+    "latency_percentiles",
+    "replay",
+    "simulate_lockstep",
+    "summarize",
+]

@@ -1,0 +1,128 @@
+"""Request-level serving metrics: records, queue gauges, goodput under SLO.
+
+One latency definition everywhere: **arrival → completion**, per request —
+the same definition `ServingEngine.EngineStats.request_seconds` uses (NOT
+per-dispatch wall time, which hides the queueing a request pays while
+earlier dispatches drain). The headline serving metric is **goodput under
+a p99 SLO**: the rate of requests that completed within their deadline,
+over the serving horizon. Peak rps alone rewards schedulers that let tail
+requests rot in a queue; goodput does not — a request served after its
+deadline (or never) counts for nothing.
+
+Definitions written to every scheduler report / BENCH_scheduler.json:
+
+  offered_load_rps  n_arrivals / (last_arrival - first_arrival)
+  goodput_rps       n_served_within_deadline / horizon,
+                    horizon = last_completion - first_arrival
+  slo_attainment    n_served_within_deadline / n_arrivals  (rejected and
+                    expired requests count against attainment — admission
+                    control is honest only if refusals aren't free)
+  p99_slo_met       p99(latency of served) <= SLO
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# terminal request states
+SERVED = "served"
+REJECTED_QUEUE_FULL = "rejected_queue_full"   # waiting queue at capacity
+REJECTED_DEADLINE = "rejected_deadline"       # admission: SLO infeasible
+EXPIRED = "expired"                           # deadline passed while queued
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle of one request through the scheduler."""
+    rid: int
+    user: int
+    shard: int
+    arrival: float               # seconds, virtual clock
+    deadline: float              # arrival + SLO (inf = no SLO)
+    priority: int = 0
+    status: str = SERVED
+    dispatch_start: float = float("nan")
+    completion: float = float("nan")
+    fallback: bool = False       # served from the popularity slate
+    ingest_epoch: int = 0        # ingest windows applied before dispatch
+    vals: np.ndarray | None = None   # served slate (for exactness checks)
+    idx: np.ndarray | None = None
+
+    @property
+    def latency(self) -> float:
+        return self.completion - self.arrival
+
+    @property
+    def met_slo(self) -> bool:
+        return self.status == SERVED and self.completion <= self.deadline
+
+
+@dataclasses.dataclass
+class QueueGauge:
+    """Queue state sampled at each dispatch decision."""
+    t: float
+    shard: int
+    depth: int                   # waiting-queue depth after batch formation
+    oldest_age: float            # age of the oldest still-waiting request
+    batch_occupancy: float       # n_real / microbatch of the fired batch
+
+
+def latency_percentiles(latencies_s, qs=(50, 95, 99)) -> dict[str, float]:
+    """{p50_ms, ...} over per-request latencies (seconds in, ms out)."""
+    lat = np.asarray(list(latencies_s), np.float64)
+    if lat.size == 0:
+        return {f"p{q}_ms": float("nan") for q in qs}
+    return {f"p{q}_ms": float(np.percentile(lat * 1e3, q)) for q in qs}
+
+
+def summarize(records: list[RequestRecord],
+              gauges: list[QueueGauge] | None = None,
+              slo_ms: float | None = None) -> dict:
+    """Aggregate a scheduler (or baseline) run into the report dict the
+    benches serialize. Empty runs summarize to zeros, not NaN crashes."""
+    n = len(records)
+    served = [r for r in records if r.status == SERVED]
+    within = [r for r in served if r.completion <= r.deadline]
+    arrivals = np.asarray([r.arrival for r in records], np.float64)
+    out = {
+        "n_requests": n,
+        "n_served": len(served),
+        "n_rejected_queue_full": sum(
+            r.status == REJECTED_QUEUE_FULL for r in records),
+        "n_rejected_deadline": sum(
+            r.status == REJECTED_DEADLINE for r in records),
+        "n_expired": sum(r.status == EXPIRED for r in records),
+        "n_fallback": sum(r.fallback for r in served),
+    }
+    out["rejected_frac"] = (
+        (out["n_rejected_queue_full"] + out["n_rejected_deadline"]) / n
+        if n else 0.0)
+    out["expired_frac"] = out["n_expired"] / n if n else 0.0
+    if n >= 2 and arrivals.max() > arrivals.min():
+        out["offered_load_rps"] = float((n - 1) / (arrivals.max() - arrivals.min()))
+    else:
+        out["offered_load_rps"] = 0.0
+    if served:
+        horizon = max(r.completion for r in served) - float(arrivals.min())
+        out["goodput_rps"] = len(within) / horizon if horizon > 0 else 0.0
+        out["latency_ms"] = latency_percentiles(r.latency for r in served)
+    else:
+        out["goodput_rps"] = 0.0
+        out["latency_ms"] = latency_percentiles(())
+    out["slo_attainment"] = len(within) / n if n else 0.0
+    if slo_ms is not None:
+        p99 = out["latency_ms"]["p99_ms"]
+        out["p99_slo_met"] = bool(served) and bool(p99 <= slo_ms)
+    if gauges:
+        depth = np.asarray([g.depth for g in gauges], np.float64)
+        age = np.asarray([g.oldest_age for g in gauges], np.float64)
+        occ = np.asarray([g.batch_occupancy for g in gauges], np.float64)
+        out["queue"] = {
+            "depth_mean": float(depth.mean()),
+            "depth_max": int(depth.max()),
+            "oldest_age_ms_mean": float(age.mean() * 1e3),
+            "oldest_age_ms_max": float(age.max() * 1e3),
+            "batch_occupancy_mean": float(occ.mean()),
+        }
+    return out

@@ -1,0 +1,379 @@
+"""Continuous-batching request scheduler with SLO-aware admission control.
+
+Sits in FRONT of `serving.ServingEngine` and replaces its drain-everything
+dispatch discipline with a real serving loop:
+
+  * **Per-shard waiting queues, independently dispatched.** Each shard's
+    queue fires its own `engine.serve_microbatch` the moment it has a full
+    microbatch and the shard is free — one slow or empty shard queue never
+    holds a global batch hostage. (The old behavior — one SPMD wave of
+    microbatch × n_shards requests in lockstep, everyone waiting for the
+    widest batch — is preserved as `simulate_lockstep`, the measured
+    baseline.)
+  * **Deadline- and priority-aware admission.** A request whose SLO cannot
+    be met given the queue backlog is rejected at arrival; a request whose
+    deadline passes while it waits is expired at batch formation. Nothing
+    queues forever. Within a queue, higher priority dispatches first.
+  * **Tail-batch coalescing with a max-wait timer.** A partial batch waits
+    at most ``max_wait_ms`` for company before it fires.
+  * **Ingest interleaving.** Online factor refresh (`serving/online.py`)
+    runs only in idle serve slots — when every queue is empty and the
+    refresh fits before the next arrival (its cost: a measured EMA, seeded
+    by the conservative ``ingest_cost_init_s`` until the first window has
+    run; the refresh jit is pre-compiled off the clock so the first
+    measurement is execution, not compilation) — so factor refresh never
+    blocks the serve path.
+
+Time model: a **virtual clock over real measured compute**. Arrivals are
+timestamped by the workload; every dispatch actually executes (its wall
+time is measured and advances the clock); shards are modeled as concurrent
+servers via per-shard ``busy_until`` times, which is the fleet the paper
+describes (each learner serves itself) rather than the one-process
+simulation host. Per-request latency is arrival → completion on this
+clock — the same definition `EngineStats.request_seconds` uses. Served
+slates are REAL engine outputs, bit-identical per request to a direct
+`ServingEngine.recommend` of the same user ids at the same factor
+snapshot (asserted in tests and BENCH_scheduler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.scheduling import metrics as metrics_lib
+from repro.scheduling.metrics import (EXPIRED, REJECTED_DEADLINE,
+                                      REJECTED_QUEUE_FULL, SERVED,
+                                      QueueGauge, RequestRecord)
+from repro.scheduling.workload import Request
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_wait_ms: float = 2.0     # tail-batch coalescing timer
+    queue_cap: int = 256         # per-shard waiting-queue capacity
+    admission: str = "deadline"  # "deadline": reject SLO-infeasible arrivals
+                                 #   (plus queue_cap); "queue_only": only
+                                 #   queue_cap; "none": admit everything
+    service_ema: float = 0.3     # EMA weight for the service-time estimate
+    expire_undispatchable: bool = True   # at batch formation, drop waiting
+                                 # requests that can no longer meet their
+                                 # deadline even if served immediately
+    ingest_cost_init_s: float = 0.25     # assumed cost of an ingest window
+                                 # before one has been measured — keeps the
+                                 # first refresh out of sub-estimate idle
+                                 # slivers between arrivals
+
+    def __post_init__(self):
+        assert self.admission in ("deadline", "queue_only", "none")
+
+
+@dataclasses.dataclass
+class SchedulerReport:
+    records: list[RequestRecord]
+    gauges: list[QueueGauge]
+    n_dispatches_per_shard: list[int]
+    ingest_intervals: list[tuple[float, float]]   # (start, end) virtual secs
+    ingest_reports: list                          # online.RefreshReport per window
+
+    @property
+    def n_ingest_windows(self) -> int:
+        return len(self.ingest_intervals)
+
+    def served(self) -> list[RequestRecord]:
+        """Served records in arrival (rid) order."""
+        return sorted((r for r in self.records if r.status == SERVED),
+                      key=lambda r: r.rid)
+
+    def summary(self, slo_ms: float | None = None) -> dict:
+        return metrics_lib.summarize(self.records, self.gauges, slo_ms)
+
+
+def _warm_refresh_jit(engine, ocfg) -> None:
+    """Compile the online-refresh step for this run's shapes before the
+    clock starts: the step donates its factor buffers, so the warm-up runs
+    on throwaway copies with an all-padding batch (valid = 0 everywhere —
+    an exact no-op update). Without this, the first ingest window's
+    measured cost is dominated by jit compilation and both the ingest-cost
+    EMA and the window's virtual-clock footprint are garbage."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import online as online_lib
+
+    cap = ocfg.batch_cap
+    U, P, Q = (jnp.array(x) for x in
+               (engine.state.U, engine.state.P, engine.state.Q))
+    out = online_lib._refresh_step(
+        U, P, Q, engine.nbr.idx, engine.nbr.wgt,
+        jnp.zeros(cap, jnp.int32), jnp.zeros(cap, jnp.int32),
+        jnp.zeros(cap, jnp.float32), jnp.zeros(cap, jnp.float32),
+        jnp.zeros(cap, jnp.float32), jnp.arange(cap, dtype=jnp.int32),
+        jnp.asarray(0, jnp.int32), engine.dmf_cfg)
+    jax.block_until_ready(out[0])
+
+
+class Scheduler:
+    """Wraps a `ServingEngine`; `run()` plays a timestamped request stream
+    through admission → per-shard queues → independent microbatch dispatch.
+
+    The engine's shard layout is reused for routing: user u lives on shard
+    ``u // rows_per_shard`` (ids outside [0, n_users) are clamped for
+    routing — they flow through admission like any request and get the
+    engine's fallback slate at dispatch, flagged in their record)."""
+
+    def __init__(self, engine, cfg: SchedulerConfig = SchedulerConfig()):
+        self.engine = engine
+        self.cfg = cfg
+        self.n_shards = engine.cfg.n_shards
+        self._rows = engine._rows if self.n_shards > 1 else engine._n_users
+        self._svc_est: float | None = None   # EMA of measured dispatch secs
+        self._ingest_est: float | None = None
+
+    # ------------------------------------------------------------ routing
+    def shard_of(self, user: int) -> int:
+        safe = min(max(int(user), 0), self.engine._n_users - 1)
+        return min(safe // self._rows, self.n_shards - 1)
+
+    # ---------------------------------------------------------- admission
+    def _admit(self, req: Request, queues, busy, now, records) -> None:
+        d = self.shard_of(req.user)
+        rec = RequestRecord(rid=req.rid, user=req.user, shard=d,
+                            arrival=req.arrival, deadline=req.deadline,
+                            priority=req.priority)
+        records.append(rec)
+        if self.cfg.admission != "none" and len(queues[d]) >= self.cfg.queue_cap:
+            rec.status = REJECTED_QUEUE_FULL
+            return
+        if (self.cfg.admission == "deadline" and self._svc_est is not None
+                and not math.isinf(req.deadline)):
+            R = self.engine.cfg.microbatch
+            waves_ahead = len(queues[d]) // R
+            est_done = (max(busy[d], now) + waves_ahead * self._svc_est
+                        + self._svc_est)
+            if est_done > req.deadline:
+                rec.status = REJECTED_DEADLINE
+                return
+        queues[d].append(rec)
+
+    # ------------------------------------------------------------ dispatch
+    def _form_batch(self, queue: list[RequestRecord], now: float
+                    ) -> list[RequestRecord]:
+        """Expire the un-serveable, then take up to `microbatch` requests in
+        (priority desc, arrival, rid) order. Mutates `queue` in place."""
+        horizon = now + (self._svc_est or 0.0) \
+            if self.cfg.expire_undispatchable else now
+        keep = []
+        for rec in queue:
+            if rec.deadline < horizon:
+                rec.status = EXPIRED
+            else:
+                keep.append(rec)
+        keep.sort(key=lambda r: (-r.priority, r.arrival, r.rid))
+        R = self.engine.cfg.microbatch
+        take, rest = keep[:R], keep[R:]
+        queue[:] = rest
+        return take
+
+    def _dispatch(self, d: int, take: list[RequestRecord], now: float,
+                  n_ingested: int) -> float:
+        vals, idx, flags, dt = self.engine.serve_microbatch(
+            [r.user for r in take], return_flags=True)
+        if self._svc_est is None:
+            self._svc_est = dt
+        else:
+            a = self.cfg.service_ema
+            self._svc_est = a * dt + (1 - a) * self._svc_est
+        done = now + dt
+        for i, rec in enumerate(take):
+            rec.status = SERVED
+            rec.dispatch_start = now
+            rec.completion = done
+            rec.fallback = bool(flags[i])
+            rec.ingest_epoch = n_ingested
+            rec.vals = vals[i]
+            rec.idx = idx[i]
+        return dt
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: list[Request], ingest_events=(),
+            ocfg=None) -> SchedulerReport:
+        """Play the stream to completion. ``ingest_events`` is a sequence of
+        (m, 2) check-in event arrays; each is one `engine.ingest` window,
+        run only in idle slots (any window still pending when the stream
+        ends runs after it). Returns the full per-request report."""
+        from repro.serving import online as online_lib
+
+        eng, D = self.engine, self.n_shards
+        R = eng.cfg.microbatch
+        max_wait = self.cfg.max_wait_ms / 1e3
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        queues: list[list[RequestRecord]] = [[] for _ in range(D)]
+        busy = [0.0] * D
+        records: list[RequestRecord] = []
+        gauges: list[QueueGauge] = []
+        n_disp = [0] * D
+        ingest_pending = list(ingest_events)
+        ingest_intervals: list[tuple[float, float]] = []
+        ingest_reports = []
+        ocfg = ocfg or online_lib.OnlineConfig()
+        if ingest_pending:
+            _warm_refresh_jit(eng, ocfg)
+        clock = reqs[0].arrival if reqs else 0.0
+        i = 0
+        n = len(reqs)
+
+        def run_ingest_window(at: float) -> float:
+            ev = ingest_pending.pop(0)
+            t0 = time.perf_counter()
+            ingest_reports.append(eng.ingest(np.asarray(ev), ocfg))
+            din = time.perf_counter() - t0
+            self._ingest_est = din if self._ingest_est is None else (
+                0.5 * din + 0.5 * self._ingest_est)
+            ingest_intervals.append((at, at + din))
+            for d in range(D):     # factors mutate: serving waits it out
+                busy[d] = max(busy[d], at + din)
+            return din
+
+        while i < n or any(queues):
+            while i < n and reqs[i].arrival <= clock:
+                self._admit(reqs[i], queues, busy, clock, records)
+                i += 1
+            next_arrival = reqs[i].arrival if i < n else _INF
+            # earliest shard that can and should fire
+            t_fire, shard = _INF, -1
+            for d in range(D):
+                if not queues[d]:
+                    continue
+                t = max(busy[d], clock)
+                if len(queues[d]) < R:
+                    t = max(t, min(r.arrival for r in queues[d]) + max_wait)
+                if t < t_fire:
+                    t_fire, shard = t, d
+            if shard < 0:
+                # everything idle: ingest if it fits, else jump to arrivals
+                est_in = (self._ingest_est if self._ingest_est is not None
+                          else self.cfg.ingest_cost_init_s)
+                if ingest_pending and (
+                        next_arrival == _INF
+                        or clock + est_in <= next_arrival):
+                    run_ingest_window(clock)
+                    continue
+                if next_arrival == _INF:
+                    break
+                clock = next_arrival
+                continue
+            if next_arrival < t_fire:
+                clock = next_arrival   # an arrival may fill a batch earlier
+                continue
+            clock = max(clock, t_fire)
+            take = self._form_batch(queues[shard], clock)
+            if not take:               # queue was all-expired
+                continue
+            dt = self._dispatch(shard, take, clock, len(ingest_intervals))
+            busy[shard] = clock + dt
+            n_disp[shard] += 1
+            waiting = queues[shard]
+            gauges.append(QueueGauge(
+                t=clock, shard=shard, depth=len(waiting),
+                oldest_age=(clock - min(r.arrival for r in waiting)
+                            if waiting else 0.0),
+                batch_occupancy=len(take) / R))
+        while ingest_pending:          # stream over: finish refresh backlog
+            clock += run_ingest_window(clock)
+        return SchedulerReport(records, gauges, n_disp, ingest_intervals,
+                               ingest_reports)
+
+
+def simulate_lockstep(engine, requests: list[Request]) -> SchedulerReport:
+    """The pre-scheduler dispatch discipline, made measurable on the same
+    virtual clock: one global wave at a time, each wave taking up to
+    `microbatch` FIFO requests from EVERY shard queue and completing
+    together (`engine.serve_wave` — the one-SPMD-dispatch lockstep), no
+    admission control, no expiry. Requests pay for the widest batch: this
+    is the baseline whose p50 balloons with shard count in BENCH_serving.
+    At ``n_shards == 1`` the wave degenerates to `serve_microbatch`."""
+    D = engine.cfg.n_shards
+    R = engine.cfg.microbatch
+    rows = engine._rows if D > 1 else engine._n_users
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    queues: list[list[RequestRecord]] = [[] for _ in range(D)]
+    records: list[RequestRecord] = []
+    gauges: list[QueueGauge] = []
+    n_disp = [0] * D
+    free = 0.0
+    i, n = 0, len(reqs)
+    clock = reqs[0].arrival if reqs else 0.0
+
+    def admit_up_to(t: float):
+        nonlocal i
+        while i < n and reqs[i].arrival <= t:
+            r = reqs[i]
+            safe = min(max(int(r.user), 0), engine._n_users - 1)
+            d = min(safe // rows, D - 1)
+            rec = RequestRecord(rid=r.rid, user=r.user, shard=d,
+                                arrival=r.arrival, deadline=r.deadline,
+                                priority=r.priority)
+            records.append(rec)
+            queues[d].append(rec)
+            i += 1
+
+    while i < n or any(queues):
+        admit_up_to(clock)
+        if not any(queues):
+            clock = reqs[i].arrival
+            continue
+        t_fire = max(clock, free)
+        admit_up_to(t_fire)            # late arrivals still catch this wave
+        takes = [q[:R] for q in queues]
+        for d in range(D):
+            queues[d] = queues[d][len(takes[d]):]
+        flat = [rec for t in takes for rec in t]
+        if D > 1:
+            users = np.asarray([r.user for r in flat])
+            flags = (engine._fallback_mask(users) if engine.cfg.fallback
+                     else np.zeros(len(flat), bool))
+            safe = np.where(flags, 0, users).astype(np.int64)
+            uids_l = np.zeros((D, R), np.int32)
+            off = 0
+            for d in range(D):
+                m = len(takes[d])
+                uids_l[d, :m] = safe[off:off + m] % rows
+                off += m
+            vals, idx, dt = engine.serve_wave(uids_l)
+            engine.stats.n_requests += len(flat)
+            out_v = np.concatenate(
+                [vals[d, : len(takes[d])] for d in range(D)])
+            out_i = np.concatenate(
+                [idx[d, : len(takes[d])] for d in range(D)])
+            if flags.any():
+                out_v = np.array(out_v)
+                out_i = np.array(out_i)
+                out_v[flags] = engine._pop_vals
+                out_i[flags] = engine._pop_items
+                engine.stats.n_fallbacks += int(flags.sum())
+        else:
+            out_v, out_i, flags, dt = engine.serve_microbatch(
+                [r.user for r in flat], return_flags=True)
+        done = t_fire + dt
+        for j, rec in enumerate(flat):
+            rec.status = SERVED
+            rec.dispatch_start = t_fire
+            rec.completion = done
+            rec.fallback = bool(flags[j])
+            rec.vals = out_v[j]
+            rec.idx = out_i[j]
+        for d in range(D):
+            if takes[d]:
+                n_disp[d] += 1
+            gauges.append(QueueGauge(
+                t=t_fire, shard=d, depth=len(queues[d]),
+                oldest_age=(t_fire - min(r.arrival for r in queues[d])
+                            if queues[d] else 0.0),
+                batch_occupancy=len(takes[d]) / R))
+        clock = free = done
+    return SchedulerReport(records, gauges, n_disp, [], [])

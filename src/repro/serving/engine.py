@@ -69,12 +69,25 @@ class EngineStats:
     n_events: int = 0
     n_fallbacks: int = 0
     dispatch_seconds: list[float] = dataclasses.field(default_factory=list)
+    # per-REQUEST arrival→completion, one entry per served request. A request
+    # that rides the w-th dispatch of a drain pays for every dispatch before
+    # it — the lockstep cost per-dispatch numbers hide. This is the one
+    # latency definition shared with scheduling/metrics.py.
+    request_seconds: list[float] = dataclasses.field(default_factory=list)
 
     def reset(self) -> None:
         """Zero all counters/latencies (e.g. after warm-up dispatches)."""
         self.__dict__.update(dataclasses.asdict(EngineStats()))
 
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        """Request-level (arrival→completion) latency percentiles."""
+        if not self.request_seconds:
+            return {f"p{q}_ms": float("nan") for q in qs}
+        lat = np.asarray(self.request_seconds) * 1e3
+        return {f"p{q}_ms": float(np.percentile(lat, q)) for q in qs}
+
+    def dispatch_latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        """Per-dispatch wall-time percentiles (diagnostic, NOT per-request)."""
         if not self.dispatch_seconds:
             return {f"p{q}_ms": float("nan") for q in qs}
         lat = np.asarray(self.dispatch_seconds) * 1e3
@@ -100,6 +113,24 @@ def _dispatch_dense(U, V, seen, uids, *, k: int, interpret: bool):
     """Dense baseline microbatch: same gather, full-J streaming top-k."""
     return ops.recommend_topk_peruser(
         U[uids], V[uids], seen[uids], k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "prune"))
+def _dispatch_rows(U, P, Q, seen, bucket_items, user_bucket, uids, *,
+                   k: int, interpret: bool, prune: bool):
+    """Shard-independent microbatch over the raw factor state: gathers the
+    requested rows and forms their V = P + Q view on the fly (gather-then-add
+    of the same rows is bitwise identical to gathering a precomputed V).
+    This is the `serve_microbatch` dispatch — it never touches the sharded
+    device views, so one shard's queue can be served without the SPMD
+    lockstep over the whole mesh."""
+    u = U[uids]
+    v = P[uids] + Q[uids]
+    s = seen[uids]
+    if prune:
+        cand = bucket_items[user_bucket[uids]]
+        return ops.serve_topk(u, v, cand, s, k, interpret=interpret)
+    return ops.recommend_topk_peruser(u, v, s, k, interpret=interpret)
 
 
 def _make_sharded_dispatch(mesh, *, k: int, interpret: bool, prune: bool):
@@ -234,22 +265,51 @@ class ServingEngine:
         return flags
 
     # ------------------------------------------------------------------ serve
-    def _microbatches(self, user_ids: Iterable[int]) -> Iterator[tuple[np.ndarray, int]]:
-        """Fixed-shape request batches: (padded ids (R,), n_real)."""
+    def _microbatches(
+        self, user_ids: Iterable[int], t_arrival: float | None = None
+    ) -> Iterator[tuple[np.ndarray, int, np.ndarray]]:
+        """Fixed-shape request batches: (padded ids (R,), n_real, arrival
+        timestamps (n_real,) — stamped when each id was pulled from the
+        stream, the request-level latency anchor). ``t_arrival`` overrides
+        the pull-time stamps with one shared anchor — `recommend` passes its
+        call time, because there the whole batch is queued up-front and later
+        microbatches wait on the earlier ones."""
         R = self.cfg.microbatch
         buf = np.zeros(R, np.int32)
+        arr = np.zeros(R, np.float64)
         n = 0
         for uid in user_ids:
             buf[n] = uid
+            arr[n] = time.perf_counter() if t_arrival is None else t_arrival
             n += 1
             if n == R:
-                yield buf.copy(), n
+                yield buf.copy(), n, arr[:n].copy()
                 n = 0
         if n:
             buf[n:] = buf[0]       # pad with a real user id (results dropped)
-            yield buf.copy(), n
+            yield buf.copy(), n, arr[:n].copy()
 
     # ------------------------------------------------------------ sharded serve
+    def serve_wave(self, uids_local: np.ndarray) -> tuple[np.ndarray, np.ndarray, float]:
+        """ONE lockstep SPMD dispatch over the whole mesh: ``uids_local`` is
+        (n_shards, microbatch) shard-LOCAL row ids (pad unused slots with 0 —
+        callers drop those results). Every shard computes its full microbatch
+        whether its queue was full or empty; returns
+        (vals (D, R, k), idx (D, R, k), wall seconds). This is the global-
+        batch primitive the continuous-batching scheduler's per-shard
+        independent dispatch (`serve_microbatch`) is measured against."""
+        D, R, k = self.cfg.n_shards, self.cfg.microbatch, self.cfg.k
+        t0 = time.perf_counter()
+        vals, idx = self._dispatch_sh(
+            self._U_sh, self._V_sh, self._seen_sh, self._ub_sh,
+            self._bucket_items, jnp.asarray(uids_local))
+        jax.block_until_ready(idx)
+        dt = time.perf_counter() - t0
+        self.stats.dispatch_seconds.append(dt)
+        self.stats.n_dispatches += 1
+        return (np.asarray(vals).reshape(D, R, k),
+                np.asarray(idx).reshape(D, R, k), dt)
+
     def _sharded_dispatches(
         self, user_ids: np.ndarray
     ) -> Iterator[tuple[list[np.ndarray], np.ndarray, np.ndarray]]:
@@ -257,11 +317,17 @@ class ServingEngine:
         queues SPMD: each dispatch takes up to `microbatch` requests from
         EVERY shard's queue at once (uids rebased to shard-local rows,
         padding = local row 0, results dropped). Yields
-        (positions-per-shard, vals (D, R, k), idx (D, R, k))."""
-        D, R, k = self.cfg.n_shards, self.cfg.microbatch, self.cfg.k
+        (positions-per-shard, vals (D, R, k), idx (D, R, k)).
+
+        Request-level latency: every request in the drain "arrived" when the
+        drain started, so a request served by the w-th dispatch is charged
+        the full wall time of dispatches 1..w — the lockstep queueing cost.
+        """
+        D, R = self.cfg.n_shards, self.cfg.microbatch
         shard = user_ids // self._rows
         queues = [np.nonzero(shard == d)[0] for d in range(D)]
         offs = [0] * D
+        t_arrival = time.perf_counter()
         while any(o < len(q) for o, q in zip(offs, queues)):
             uids_l = np.zeros((D, R), np.int32)
             sel = []
@@ -270,16 +336,12 @@ class ServingEngine:
                 offs[d] += len(take)
                 uids_l[d, : len(take)] = user_ids[take] % self._rows
                 sel.append(take)
-            t0 = time.perf_counter()
-            vals, idx = self._dispatch_sh(
-                self._U_sh, self._V_sh, self._seen_sh, self._ub_sh,
-                self._bucket_items, jnp.asarray(uids_l))
-            jax.block_until_ready(idx)
-            self.stats.dispatch_seconds.append(time.perf_counter() - t0)
-            self.stats.n_dispatches += 1
-            self.stats.n_requests += int(sum(len(t) for t in sel))
-            yield (sel, np.asarray(vals).reshape(D, R, k),
-                   np.asarray(idx).reshape(D, R, k))
+            vals, idx, _ = self.serve_wave(uids_l)
+            n_real = int(sum(len(t) for t in sel))
+            self.stats.n_requests += n_real
+            self.stats.request_seconds.extend(
+                [time.perf_counter() - t_arrival] * n_real)
+            yield sel, vals, idx
 
     def _serve_sharded(self, user_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Serve a whole batch SPMD, results in the caller's request order."""
@@ -294,27 +356,52 @@ class ServingEngine:
         return out_v, out_i
 
     def serve_stream(
-        self, user_ids: Iterable[int]
+        self, user_ids: Iterable[int], ordered: bool = False,
+        _t_arrival: float | None = None,
     ) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
         """Drain a request stream; yields (user_ids, vals, idx) per
         microbatch — one jitted dispatch each, padding sliced off.
 
         In sharded mode (``n_shards > 1``) the stream is drained up-front,
         requests route to their home shard, and each yield is one SPMD
-        dispatch covering up to `microbatch` requests per shard — yield
-        order follows the shard queues, not strict arrival order (use
-        `recommend` for order-preserving results)."""
+        dispatch covering up to `microbatch` requests per shard. By default
+        the yield order follows the shard queues, not strict arrival order;
+        ``ordered=True`` reassembles results by arrival index and yields the
+        maximal arrival-contiguous prefix after each dispatch (same
+        dispatches, results buffered — first yields may be delayed until the
+        slowest-filling shard completes the requests ahead of them). The
+        non-sharded path is always in arrival order."""
         if self._sharded:
             ids = np.asarray(list(user_ids), np.int64)
+            if not ordered:
+                for sel, vals, idx in self._sharded_dispatches(ids):
+                    pos = np.concatenate([t for t in sel if len(t)])
+                    v = np.concatenate(
+                        [vals[d, : len(t)] for d, t in enumerate(sel) if len(t)])
+                    i = np.concatenate(
+                        [idx[d, : len(t)] for d, t in enumerate(sel) if len(t)])
+                    yield ids[pos], v, i
+                return
+            n_total, k = len(ids), self.cfg.k
+            out_v = np.zeros((n_total, k), np.float32)
+            out_i = np.full((n_total, k), -1, np.int32)
+            done = np.zeros(n_total, bool)
+            emitted = 0
             for sel, vals, idx in self._sharded_dispatches(ids):
-                pos = np.concatenate([t for t in sel if len(t)])
-                v = np.concatenate(
-                    [vals[d, : len(t)] for d, t in enumerate(sel) if len(t)])
-                i = np.concatenate(
-                    [idx[d, : len(t)] for d, t in enumerate(sel) if len(t)])
-                yield ids[pos], v, i
+                for d, take in enumerate(sel):
+                    if len(take):
+                        out_v[take] = vals[d, : len(take)]
+                        out_i[take] = idx[d, : len(take)]
+                        done[take] = True
+                stop = emitted
+                while stop < n_total and done[stop]:
+                    stop += 1
+                if stop > emitted:
+                    yield ids[emitted:stop], out_v[emitted:stop], out_i[emitted:stop]
+                    emitted = stop
+            assert emitted == n_total, "sharded drain left requests unserved"
             return
-        for buf, n in self._microbatches(user_ids):
+        for buf, n, arr in self._microbatches(user_ids, _t_arrival):
             uids = jnp.asarray(buf)
             t0 = time.perf_counter()
             if self.cfg.prune:
@@ -327,10 +414,59 @@ class ServingEngine:
                     self.state.U, self.V, self.seen, uids,
                     k=self.cfg.k, interpret=self.cfg.interpret)
             jax.block_until_ready(idx)
-            self.stats.dispatch_seconds.append(time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            self.stats.dispatch_seconds.append(t1 - t0)
             self.stats.n_dispatches += 1
             self.stats.n_requests += n
+            self.stats.request_seconds.extend((t1 - arr).tolist())
             yield buf[:n], np.asarray(vals)[:n], np.asarray(idx)[:n]
+
+    def serve_microbatch(self, user_ids, return_flags: bool = False):
+        """Per-shard INDEPENDENT dispatch primitive: serve ≤ `microbatch`
+        requests in one jitted call over the raw factor state, with no SPMD
+        lockstep across the mesh — this is what `scheduling.Scheduler` calls
+        per shard queue, so one slow or empty queue never holds a global
+        batch hostage. Works at any ``n_shards`` (the dispatch reads the
+        unsharded state copy the engine keeps for ingest) and is bitwise
+        identical per request to `recommend` / the SPMD path: same serve
+        kernel, same rows, per-row independent.
+
+        Returns ``(vals (n,k), idx (n,k), service_seconds)`` — plus the
+        per-request fallback flags before the seconds if ``return_flags``.
+        Fallback handling matches `recommend`: flagged requests (unknown /
+        cold / empty-bucket users) are clamped pre-dispatch and overwritten
+        with the popularity slate."""
+        user_ids = np.asarray(user_ids)
+        n, R, k = len(user_ids), self.cfg.microbatch, self.cfg.k
+        assert n <= R, f"serve_microbatch takes ≤ microbatch ids ({n} > {R})"
+        if n == 0:
+            out = (np.empty((0, k), np.float32), np.empty((0, k), np.int32))
+            return out + ((np.empty(0, bool),) if return_flags else ()) + (0.0,)
+        flags = (self._fallback_mask(user_ids) if self.cfg.fallback
+                 else np.zeros(n, bool))
+        buf = np.zeros(R, np.int32)
+        buf[:n] = np.where(flags, 0, user_ids)
+        buf[n:] = buf[0]           # pad with a real user id (results dropped)
+        t0 = time.perf_counter()
+        vals, idx = _dispatch_rows(
+            self.state.U, self.state.P, self.state.Q, self.seen,
+            self._bucket_items, self._user_bucket, jnp.asarray(buf),
+            k=k, interpret=self.cfg.interpret, prune=self.cfg.prune)
+        jax.block_until_ready(idx)
+        dt = time.perf_counter() - t0
+        self.stats.dispatch_seconds.append(dt)
+        self.stats.request_seconds.extend([dt] * n)
+        self.stats.n_dispatches += 1
+        self.stats.n_requests += n
+        vals = np.array(np.asarray(vals)[:n])
+        idx = np.array(np.asarray(idx)[:n])
+        if flags.any():
+            vals[flags] = self._pop_vals
+            idx[flags] = self._pop_items
+            self.stats.n_fallbacks += int(flags.sum())
+        if return_flags:
+            return vals, idx, flags, dt
+        return vals, idx, dt
 
     def recommend(self, user_ids, return_flags: bool = False):
         """Convenience: serve a whole batch of user ids, results aligned to
@@ -355,7 +491,9 @@ class ServingEngine:
             vals, idx = self._serve_sharded(safe_ids.astype(np.int64))
         else:
             vals, idx = [], []
-            for _, v, i in self.serve_stream(int(u) for u in safe_ids):
+            t_call = time.perf_counter()
+            for _, v, i in self.serve_stream(
+                    (int(u) for u in safe_ids), _t_arrival=t_call):
                 vals.append(v)
                 idx.append(i)
             vals, idx = np.concatenate(vals), np.concatenate(idx)

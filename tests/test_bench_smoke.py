@@ -28,6 +28,7 @@ RUN_SECTIONS = {
     "walk_sweep": "benchmarks.walk_sweep",
     "dmf_train": "benchmarks.dmf_train_bench",
     "serving": "benchmarks.serving_bench",
+    "scheduler": "benchmarks.scheduler_bench",
     "privacy": "benchmarks.privacy_bench",
     "robustness": "benchmarks.churn_bench",
     "complexity": "benchmarks.complexity",
@@ -125,6 +126,42 @@ def test_bench_serving_tiny_schema(bench_outdir):
         assert sh["exact_match_vs_single_shard"][k] == 1.0, k
     _assert_finite(res)
     assert _assert_mirrored("BENCH_serving", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
+def test_bench_scheduler_tiny_schema(bench_outdir):
+    from benchmarks import scheduler_bench
+
+    res = scheduler_bench.main(tiny=True)
+    for key in ("config", "single_shard_capacity_rps", "grid",
+                "max_shards_measured", "p50_ms_at_max_shards",
+                "scheduler_beats_lockstep_p50_at_max_shards",
+                "ingest_interleave"):
+        assert key in res, key
+    assert res["single_shard_capacity_rps"] > 0
+    ran = {k: v for k, v in res["grid"].items() if "skipped" not in v}
+    assert ran, "no shard entries ran (device provisioning broke)"
+    for key, entry in ran.items():
+        assert len(entry["loads"]) == len(
+            res["config"]["load_fracs_of_capacity"])
+        for row in entry["loads"]:
+            for side in ("scheduler", "lockstep"):
+                s = row[side]
+                assert s["n_requests"] == res["config"]["n_requests"]
+                assert 0.0 <= s["slo_attainment"] <= 1.0
+                assert s["goodput_rps"] >= 0.0
+                assert "p99_slo_met" in s and "latency_ms" in s
+            # lockstep has no admission control: it serves everything
+            assert row["lockstep"]["n_served"] == res["config"]["n_requests"]
+        # the headline correctness contract, checked on a live run
+        assert entry["bit_identical_vs_direct"] is True, key
+    ing = res["ingest_interleave"]
+    assert ing["n_windows_run"] == 1
+    assert ing["ingest_ran_in_idle_gap"] is True
+    assert ing["pre_ingest_bit_identical_to_no_ingest"] is True
+    assert ing["post_ingest_bit_identical_to_ingested_snapshot"] is True
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_scheduler", bench_outdir) == json.loads(
         json.dumps(res, default=float))
 
 
@@ -226,6 +263,6 @@ def test_bench_mains_accept_full_flag():
             continue
         params = inspect.signature(fn).parameters
         if section in ("paper_tables", "convergence", "reg_sweep",
-                       "walk_sweep", "dmf_train", "serving", "privacy",
-                       "robustness", "complexity"):
+                       "walk_sweep", "dmf_train", "serving", "scheduler",
+                       "privacy", "robustness", "complexity"):
             assert "full" in params, f"{module}.main lost full="

@@ -1,0 +1,304 @@
+"""Scheduling subsystem: workload generators, SLO admission control,
+per-shard independent dispatch, ingest interleaving — and the contract the
+whole bench hangs off: every slate the scheduler serves is bit-identical
+to a direct `ServingEngine.recommend` of the same user ids."""
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph, metrics
+from repro.data import synthetic_poi
+from repro.scheduling import (Scheduler, SchedulerConfig, WorkloadConfig,
+                              generate, simulate_lockstep, summarize)
+from repro.scheduling import workload as wl
+from repro.scheduling.metrics import (EXPIRED, REJECTED_QUEUE_FULL, SERVED,
+                                      RequestRecord)
+from repro.serving import ServingConfig, ServingEngine, index_from_dataset
+
+pytestmark = pytest.mark.scheduling
+
+
+def _world(seed=0, epochs=4):
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=50, n_ratings=600, n_cities=4, seed=seed))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                        beta=0.1, gamma=0.01, batch_size=64)
+    state = dmf.fit(cfg, ds.train, nbr, epochs=epochs).state
+    return ds, nbr, cfg, state
+
+
+def _engine(state, ds, nbr, cfg, microbatch=8, n_shards=1, **kw):
+    return ServingEngine(
+        state, index_from_dataset(ds),
+        ServingConfig(microbatch=microbatch, k=5, n_shards=n_shards, **kw),
+        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+
+
+# ------------------------------------------------------------------ workload
+def test_poisson_arrivals_rate_and_determinism():
+    cfg = WorkloadConfig(n_requests=4000, rate_rps=1000.0, seed=5)
+    reqs = generate(cfg, n_users=64)
+    t = np.asarray([r.arrival for r in reqs])
+    assert t[0] == 0.0 and (np.diff(t) >= 0).all()
+    rate = (len(t) - 1) / (t[-1] - t[0])
+    assert 0.9 * cfg.rate_rps < rate < 1.1 * cfg.rate_rps
+    # fully seed-keyed: same config ⇒ same stream; new seed ⇒ a new one
+    again = generate(cfg, n_users=64)
+    assert [(r.user, r.arrival) for r in again] == \
+           [(r.user, r.arrival) for r in reqs]
+    other = generate(WorkloadConfig(n_requests=4000, rate_rps=1000.0, seed=6),
+                     n_users=64)
+    assert [r.arrival for r in other] != [r.arrival for r in reqs]
+    assert all(r.deadline == pytest.approx(r.arrival + 0.05) for r in reqs)
+
+
+def test_onoff_arrivals_keep_mean_rate_but_burst():
+    base = WorkloadConfig(n_requests=6000, rate_rps=1000.0, seed=1)
+    burst = WorkloadConfig(n_requests=6000, rate_rps=1000.0, process="onoff",
+                           burst_factor=4.0, duty_cycle=0.25, seed=1)
+    tp = np.asarray([r.arrival for r in generate(base, 8)])
+    tb = np.asarray([r.arrival for r in generate(burst, 8)])
+    rate_b = (len(tb) - 1) / (tb[-1] - tb[0])
+    assert 0.85 * 1000.0 < rate_b < 1.15 * 1000.0   # long-run mean preserved
+    # burstiness: inter-arrival CV well above the Poisson CV (≈1)
+    cv = lambda t: np.diff(t).std() / np.diff(t).mean()
+    assert cv(tb) > cv(tp) * 1.2
+    with pytest.raises(AssertionError):             # OFF rate would go < 0
+        WorkloadConfig(process="onoff", burst_factor=8.0, duty_cycle=0.5)
+
+
+def test_powerlaw_users_concentrate_on_head():
+    n_users = 256
+    cfg = WorkloadConfig(n_requests=8000, users="powerlaw", zipf_s=1.2,
+                         seed=2)
+    users = np.asarray([r.user for r in generate(cfg, n_users)])
+    assert users.min() >= 0 and users.max() < n_users
+    counts = np.bincount(users, minlength=n_users)
+    top = np.sort(counts)[::-1][: n_users // 10].sum() / len(users)
+    assert top > 0.5          # top 10% of users carry most of the traffic
+    uni = np.asarray([r.user for r in generate(
+        WorkloadConfig(n_requests=8000, seed=2), n_users)])
+    cu = np.bincount(uni, minlength=n_users)
+    assert np.sort(cu)[::-1][: n_users // 10].sum() / len(uni) < 0.25
+
+
+def test_replay_and_json_roundtrip(tmp_path):
+    reqs = wl.replay([3.0, 3.5, 4.0], [7, 1, 7], slo_ms=20.0,
+                     priorities=[0, 2, 1])
+    assert [r.arrival for r in reqs] == [0.0, 0.5, 1.0]   # rebased to 0
+    assert [r.priority for r in reqs] == [0, 2, 1]
+    with pytest.raises(AssertionError):
+        wl.replay([1.0, 0.5], [0, 1])                     # unsorted trace
+    best_effort = wl.replay([0.0, 1.0], [2, 3], slo_ms=0)
+    assert all(np.isinf(r.deadline) for r in best_effort)
+    # exact roundtrip on the fields the trace serializes (inf deadline ⇒ null)
+    orig = reqs + best_effort
+    back = wl.from_json(wl.to_json(orig))
+    assert [(r.user, r.arrival, r.deadline, r.priority) for r in back] == \
+           [(r.user, r.arrival, r.deadline, r.priority) for r in orig]
+    out = tmp_path / "trace.json"
+    wl.main(["--n", "16", "--n-users", "8", "--process", "onoff",
+             "--burst-factor", "4", "--duty-cycle", "0.25",
+             "-o", str(out)])
+    assert len(wl.from_json(__import__("json").loads(out.read_text()))) == 16
+
+
+# ------------------------------------------------------- scheduler contracts
+def test_scheduler_slates_bit_identical_to_direct_recommend():
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8)
+    reqs = generate(WorkloadConfig(n_requests=60, rate_rps=500.0,
+                                   users="powerlaw", slo_ms=0, seed=3),
+                    ds.n_users)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs)
+    served = rep.served()
+    assert len(served) == len(reqs)        # no SLO ⇒ everything serves
+    ref = _engine(state, ds, nbr, cfg, microbatch=8)
+    vals, idx, flags = ref.recommend([r.user for r in served],
+                                     return_flags=True)
+    for j, r in enumerate(served):
+        np.testing.assert_array_equal(r.vals, vals[j])
+        np.testing.assert_array_equal(r.idx, idx[j])
+        assert r.fallback == bool(flags[j])
+    s = rep.summary(slo_ms=50.0)
+    assert s["n_served"] == len(reqs) and s["goodput_rps"] > 0
+
+
+@pytest.mark.sharded
+def test_scheduler_sharded_bit_identical_and_independent_dispatch():
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8, n_shards=2)
+    eng.serve_microbatch(np.arange(8))     # warm: keep virtual times sane
+    reqs = generate(WorkloadConfig(n_requests=48, rate_rps=2000.0, slo_ms=0,
+                                   seed=4), ds.n_users)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs)
+    served = rep.served()
+    assert len(served) == len(reqs)
+    # both shards dispatched for themselves — no global wave involved
+    assert all(n > 0 for n in rep.n_dispatches_per_shard)
+    assert [r.shard for r in served] == \
+           [Scheduler(eng).shard_of(r.user) for r in served]
+    ref = _engine(state, ds, nbr, cfg, microbatch=8, n_shards=2)
+    vals, idx = ref.recommend([r.user for r in served])
+    for j, r in enumerate(served):
+        np.testing.assert_array_equal(r.vals, vals[j])
+        np.testing.assert_array_equal(r.idx, idx[j])
+
+
+@pytest.mark.sharded
+def test_empty_shard_queue_never_stalls_dispatch():
+    """All traffic on shard 0: shard 1's empty queue must not delay or
+    deadlock anything (the exact hostage situation lockstep creates)."""
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8, n_shards=2)
+    rows = eng._rows
+    users = np.arange(24) % rows           # every user routes to shard 0
+    reqs = wl.replay(np.linspace(0, 0.01, 24), users, slo_ms=0)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs)
+    assert len(rep.served()) == 24
+    assert rep.n_dispatches_per_shard[0] > 0
+    assert rep.n_dispatches_per_shard[1] == 0
+
+
+def test_impossible_slo_expires_everything_without_dispatch():
+    """SLO far below the coalescing timer with a batch that can never fill:
+    admission lets them in (no service estimate yet), batch formation
+    expires them all, and the engine is never invoked."""
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=32)
+    reqs = wl.replay(np.linspace(0, 0.001, 6), np.arange(6), slo_ms=1e-3)
+    rep = Scheduler(eng, SchedulerConfig(max_wait_ms=2.0)).run(reqs)
+    assert all(r.status == EXPIRED for r in rep.records)
+    assert eng.stats.n_dispatches == 0
+    s = rep.summary(slo_ms=1e-3)
+    assert s["n_served"] == 0 and s["goodput_rps"] == 0.0
+    assert s["expired_frac"] == 1.0 and s["slo_attainment"] == 0.0
+
+
+def test_burst_beyond_queue_capacity_rejects_overflow():
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=4)
+    n, cap = 50, 12
+    reqs = wl.replay(np.zeros(n), np.arange(n) % ds.n_users, slo_ms=0)
+    rep = Scheduler(eng, SchedulerConfig(queue_cap=cap,
+                                         admission="queue_only")).run(reqs)
+    by = {}
+    for r in rep.records:
+        by[r.status] = by.get(r.status, 0) + 1
+    assert by[REJECTED_QUEUE_FULL] == n - cap
+    assert by[SERVED] == cap
+    s = rep.summary()
+    assert s["n_rejected_queue_full"] == n - cap
+    assert s["rejected_frac"] == pytest.approx((n - cap) / n)
+
+
+def test_priority_dispatches_before_earlier_arrivals():
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8)
+    eng.serve_microbatch(np.arange(8))     # warm
+    n = 16
+    times = np.zeros(n)
+    users = np.arange(n) % ds.n_users
+    pr = np.asarray([0, 1] * (n // 2))     # urgent ones arrive interleaved
+    reqs = wl.make_requests(times, users, slo_ms=0, priorities=pr)
+    rep = Scheduler(eng, SchedulerConfig(admission="none")).run(reqs)
+    served = {r.rid: r for r in rep.served()}
+    hi = [served[r.rid].dispatch_start for r in reqs if r.priority == 1]
+    lo = [served[r.rid].dispatch_start for r in reqs if r.priority == 0]
+    assert max(hi) <= min(lo)              # whole urgent batch fired first
+
+
+def test_fallback_users_flow_through_admission_and_get_flagged():
+    ds, nbr, cfg, state = _world()
+    seen = metrics.masks_from_interactions(ds.n_users, ds.n_items, ds.train)
+    seen[7] = False                        # cold user
+    eng = ServingEngine(state, index_from_dataset(ds),
+                        ServingConfig(microbatch=8, k=5), seen=seen,
+                        train=ds.train, nbr=nbr, dmf_cfg=cfg)
+    users = [7, ds.n_users + 3, -2, 0, 11]
+    reqs = wl.replay(np.linspace(0, 0.001, len(users)), users, slo_ms=0)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs)
+    served = rep.served()
+    assert [r.status for r in rep.records] == [SERVED] * len(users)
+    flags = [r.fallback for r in served]
+    assert flags == [True, True, True, False, False]
+    ref = ServingEngine(state, index_from_dataset(ds),
+                        ServingConfig(microbatch=8, k=5), seen=seen)
+    pv, pi, pf = ref.recommend(np.asarray(users), return_flags=True)
+    for j, r in enumerate(served):
+        assert r.fallback == bool(pf[j])
+        np.testing.assert_array_equal(r.idx, pi[j])
+        np.testing.assert_array_equal(r.vals, pv[j])
+
+
+def test_ingest_interleaves_into_idle_gap_and_stays_snapshot_exact():
+    """Refresh runs between bursts, never blocking a queued request, and
+    slates are exact against the matching factor snapshot on both sides."""
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8)
+    rng = np.random.default_rng(9)
+    users = rng.integers(0, ds.n_users, 24)
+    t = np.concatenate([np.linspace(0, 0.005, 12),
+                        60.0 + np.linspace(0, 0.005, 12)])
+    reqs = wl.replay(t, users, slo_ms=0)
+    events = ds.test[:8].astype(np.int64)
+    rep = Scheduler(eng, SchedulerConfig()).run(reqs, ingest_events=[events])
+    assert rep.n_ingest_windows == 1
+    (t0, t1), = rep.ingest_intervals
+    assert 0.005 <= t0 and t1 <= 60.0      # strictly inside the idle gap
+    served = rep.served()
+    pre = [r for r in served if r.ingest_epoch == 0]
+    post = [r for r in served if r.ingest_epoch == 1]
+    assert len(pre) == 12 and len(post) == 12
+    ref0 = _engine(state, ds, nbr, cfg, microbatch=8)
+    v0, i0 = ref0.recommend([r.user for r in pre])
+    ref1 = _engine(state, ds, nbr, cfg, microbatch=8)
+    ref1.ingest(events)
+    v1, i1 = ref1.recommend([r.user for r in post])
+    for j, r in enumerate(pre):
+        np.testing.assert_array_equal(r.vals, v0[j])
+        np.testing.assert_array_equal(r.idx, i0[j])
+    for j, r in enumerate(post):
+        np.testing.assert_array_equal(r.vals, v1[j])
+        np.testing.assert_array_equal(r.idx, i1[j])
+
+
+def test_lockstep_baseline_serves_everything_fifo():
+    ds, nbr, cfg, state = _world()
+    eng = _engine(state, ds, nbr, cfg, microbatch=8)
+    reqs = generate(WorkloadConfig(n_requests=40, rate_rps=1000.0, slo_ms=0,
+                                   seed=8), ds.n_users)
+    rep = simulate_lockstep(eng, reqs)
+    served = rep.served()
+    assert len(served) == len(reqs)        # no admission, no expiry
+    # FIFO: completion times are nondecreasing in arrival order
+    comp = [r.completion for r in served]
+    assert all(a <= b + 1e-12 for a, b in zip(comp, comp[1:]))
+    ref = _engine(state, ds, nbr, cfg, microbatch=8)
+    vals, idx = ref.recommend([r.user for r in served])
+    for j, r in enumerate(served):
+        np.testing.assert_array_equal(r.vals, vals[j])
+        np.testing.assert_array_equal(r.idx, idx[j])
+
+
+# ------------------------------------------------------------------- metrics
+def test_summarize_empty_and_slo_accounting():
+    assert summarize([], [], slo_ms=50.0)["goodput_rps"] == 0.0
+    recs = [
+        RequestRecord(rid=0, user=0, shard=0, arrival=0.0, deadline=0.010,
+                      status=SERVED, dispatch_start=0.0, completion=0.005),
+        RequestRecord(rid=1, user=1, shard=0, arrival=0.0, deadline=0.010,
+                      status=SERVED, dispatch_start=0.0, completion=0.020),
+        RequestRecord(rid=2, user=2, shard=0, arrival=0.001, deadline=0.011,
+                      status=EXPIRED),
+    ]
+    s = summarize(recs, None, slo_ms=10.0)
+    assert s["n_served"] == 2 and s["n_expired"] == 1
+    # the late request and the expired one both count against attainment
+    assert s["slo_attainment"] == pytest.approx(1 / 3)
+    # goodput: 1 within-deadline over last_completion - first_arrival
+    assert s["goodput_rps"] == pytest.approx(1 / 0.020)
+    assert s["p99_slo_met"] is False
+    assert s["latency_ms"]["p99_ms"] > 10.0

@@ -540,3 +540,81 @@ def test_online_refresh_padded_rows_are_exact_noops():
     np.testing.assert_array_equal(np.asarray(sa.U), np.asarray(sb.U))
     np.testing.assert_array_equal(np.asarray(sa.P), np.asarray(sb.P))
     np.testing.assert_array_equal(np.asarray(sa.Q), np.asarray(sb.Q))
+
+
+# ------------------------------------------------- stream order & latency
+@pytest.mark.sharded
+def test_serve_stream_ordered_and_unordered_pinned():
+    """Sharded serve_stream has two documented yield orders: the default
+    follows the shard drain (per dispatch: shard 0's batch, then shard 1's),
+    ordered=True reassembles strict arrival order. Pin BOTH, and pin every
+    slate bitwise against the single-shard engine. fallback=False engines:
+    the raw stream never applies popularity overwrites."""
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    users = np.random.default_rng(2).integers(0, ds.n_users, 37)
+    ref = ServingEngine(state, index,
+                        ServingConfig(microbatch=8, k=5, fallback=False),
+                        train=ds.train)
+    v_ref, i_ref = ref.recommend(users)
+    slate = {int(u): j for j, u in enumerate(users)}   # user -> a ref row
+
+    eng = ServingEngine(state, index,
+                        ServingConfig(microbatch=8, k=5, n_shards=2,
+                                      fallback=False), train=ds.train)
+    got = list(eng.serve_stream(users, ordered=True))
+    np.testing.assert_array_equal(
+        np.concatenate([u for u, _, _ in got]), users)
+    np.testing.assert_array_equal(
+        np.concatenate([v for _, v, _ in got]), v_ref)
+    np.testing.assert_array_equal(
+        np.concatenate([i for _, _, i in got]), i_ref)
+
+    eng2 = ServingEngine(state, index,
+                         ServingConfig(microbatch=8, k=5, n_shards=2,
+                                       fallback=False), train=ds.train)
+    rows = eng2._rows
+    flat_u, flat_v, flat_i = [], [], []
+    for u, v, i in eng2.serve_stream(users):
+        flat_u.extend(int(x) for x in u)
+        flat_v.append(v)
+        flat_i.append(i)
+    # the default order is exactly the shard-queue drain order
+    queues = [[int(u) for u in users if u // rows == d] for d in range(2)]
+    offs, expected = [0, 0], []
+    while any(o < len(q) for o, q in zip(offs, queues)):
+        for d in range(2):
+            take = queues[d][offs[d]:offs[d] + 8]
+            offs[d] += len(take)
+            expected.extend(take)
+    assert flat_u == expected
+    flat_v, flat_i = np.concatenate(flat_v), np.concatenate(flat_i)
+    for j, u in enumerate(flat_u):       # same user => identical slate
+        np.testing.assert_array_equal(flat_v[j], v_ref[slate[u]])
+        np.testing.assert_array_equal(flat_i[j], i_ref[slate[u]])
+
+
+def test_latency_accounting_is_request_level():
+    """EngineStats charges arrival->completion per REQUEST: a request in the
+    w-th microbatch of a drain pays for every dispatch before it. The old
+    per-dispatch numbers survive as the dispatch_* diagnostics."""
+    ds, nbr, cfg, state = _world()
+    index = index_from_dataset(ds)
+    eng = ServingEngine(state, index, ServingConfig(microbatch=8, k=5),
+                        train=ds.train)
+    eng.recommend(np.arange(24) % ds.n_users)
+    st = eng.stats
+    assert st.n_requests == 24 and len(st.request_seconds) == 24
+    assert st.n_dispatches == 3 and len(st.dispatch_seconds) == 3
+    # the last microbatch's requests paid for all three dispatches
+    assert max(st.request_seconds) >= sum(st.dispatch_seconds)
+    assert st.request_seconds == sorted(st.request_seconds)
+    p, d = st.latency_percentiles(), st.dispatch_latency_percentiles()
+    assert set(p) == {"p50_ms", "p95_ms", "p99_ms"} == set(d)
+    assert p["p99_ms"] >= d["p99_ms"]
+
+    eng2 = ServingEngine(state, index, ServingConfig(microbatch=8, k=5),
+                        train=ds.train)
+    *_, dt = eng2.serve_microbatch(np.arange(5))
+    assert eng2.stats.request_seconds == [dt] * 5
+    assert eng2.stats.n_requests == 5 and eng2.stats.n_dispatches == 1
