@@ -170,6 +170,18 @@ def main() -> None:
             f"serving_sharded,0,devices={sh['config']['n_devices']};"
             f"{rps_sh or 'all_skipped'}"
         )
+        mil = res["million"]
+        mr = mil["requests_per_sec"]
+        print(
+            f"serving_million,0,"
+            f"I={mil['config']['n_users']};J={mil['config']['n_items']};"
+            f"cells={mil['index']['n_cells']};cap={mil['index']['cap']};"
+            f"slab_gb={mil['resident_gb']['slab_fp32']:.2f};"
+            f"fp32={mr['fp32']:.0f}rps;int8={mr['int8']:.0f}rps;"
+            f"bf16={mr['bf16']:.0f}rps;"
+            f"fp32_bitwise={mil['exact']['fp32_bitwise_vs_dense_engine']};"
+            f"int8_delta={mil['exact']['int8']['max_abs_score_delta']:.2e}"
+        )
 
     if want("scheduler"):
         from benchmarks import scheduler_bench

@@ -774,25 +774,59 @@ def fit(
 def evaluate(
     state: DMFState, train: np.ndarray, test: np.ndarray, n_users: int, n_items: int,
     ks=(5, 10), interpret: bool = True, n_shards: int = 1,
+    chunk_users: int | None = None,
 ) -> dict[str, float]:
     """Ranking metrics via the streaming top-k kernel: the (I, J) score
     matrix never materializes — per-user running top-k is carried across
     item tiles (ops.recommend_topk_peruser). ``n_shards > 1`` runs the
-    kernel learner-sharded over the mesh (row-parallel, same results)."""
+    kernel learner-sharded over the mesh (row-parallel, same results).
+
+    ``chunk_users`` streams the USER axis too: each chunk builds only its
+    own V = P + Q rows and train/test mask rows (O(chunk · J) peak, from
+    the interaction pairs directly), so the full (I, J, K) V view, the
+    (I, J) masks and the factors never co-materialize — the regime that
+    makes evaluation feasible when I is in the millions while the (I, S)
+    neighbor table from training is still resident. Per-user hit counts
+    are integers and the final reduction sees them in the same global user
+    order, so results are IDENTICAL floats to the unchunked path."""
     from repro.kernels import ops
     if n_shards > 1:
         from repro.sharding import dmf as sharded_dmf
         return sharded_dmf.evaluate_sharded(
             state, train, test, n_users, n_items, n_shards, ks=ks,
-            interpret=interpret)
-    train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
-    test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+            interpret=interpret, chunk_users=chunk_users)
     kmax = max(ks)
-    V = state.P + state.Q                     # (I, J, K) per-learner factors
-    _, idx = ops.recommend_topk_peruser(
-        state.U, V, jnp.asarray(train_mask), kmax, interpret=interpret
-    )
-    return metrics_lib.evaluate_ranking_from_topk(np.asarray(idx), test_mask, ks)
+    if chunk_users is None:
+        train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
+        test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+        V = state.P + state.Q                 # (I, J, K) per-learner factors
+        _, idx = ops.recommend_topk_peruser(
+            state.U, V, jnp.asarray(train_mask), kmax, interpret=interpret
+        )
+        return metrics_lib.evaluate_ranking_from_topk(
+            np.asarray(idx), test_mask, ks)
+    hits: dict[int, list[np.ndarray]] = {k: [] for k in ks}
+    n_test_parts: list[np.ndarray] = []
+    step = max(int(chunk_users), 1)
+    for s in range(0, n_users, step):
+        e = min(s + step, n_users)
+        tm = metrics_lib.masks_from_interactions_rows(s, e - s, n_items, train)
+        ts = metrics_lib.masks_from_interactions_rows(s, e - s, n_items, test)
+        V = state.P[s:e] + state.Q[s:e]       # only this chunk's item view
+        _, idx = ops.recommend_topk_peruser(
+            state.U[s:e], V, jnp.asarray(tm), kmax, interpret=interpret)
+        rec = np.asarray(idx)
+        for k in ks:
+            hits[k].append(metrics_lib.topk_hits(rec, ts, k))
+        n_test_parts.append(ts.sum(axis=1))
+    n_test = np.concatenate(n_test_parts) if n_test_parts else np.zeros(0, int)
+    out = {}
+    for k in ks:
+        p, r = metrics_lib.precision_recall_from_hits(
+            np.concatenate(hits[k]) if hits[k] else np.zeros(0, int), n_test, k)
+        out[f"P@{k}"] = p
+        out[f"R@{k}"] = r
+    return out
 
 
 def evaluate_dense(

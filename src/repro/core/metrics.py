@@ -33,6 +33,30 @@ def precision_recall_at_k(
     return precision_recall_from_topk(rec, test_mask, k)
 
 
+def topk_hits(rec: np.ndarray, test_mask: np.ndarray, k: int) -> np.ndarray:
+    """(n,) int per-user hit counts in the first k recommendation slots —
+    the chunkable integer core of P@k / R@k: hit counts from different user
+    chunks concatenate into exactly the array a whole-matrix pass yields."""
+    rec_k = np.asarray(rec[:, :k])
+    filled = rec_k >= 0
+    safe = np.where(filled, rec_k, 0)
+    return (np.take_along_axis(test_mask, safe, axis=1) & filled).sum(axis=1)
+
+
+def precision_recall_from_hits(
+    hits: np.ndarray, n_test: np.ndarray, k: int
+) -> tuple[float, float]:
+    """Final P@k / R@k reduction over per-user hit counts and test-set
+    sizes (the chunk-accumulated counterpart of
+    `precision_recall_from_topk` — identical floats, by construction)."""
+    valid = n_test > 0
+    if not valid.any():
+        return 0.0, 0.0
+    p_at_k = float((hits[valid] / k).mean())
+    r_at_k = float((hits[valid] / n_test[valid]).mean())
+    return p_at_k, r_at_k
+
+
 def precision_recall_from_topk(
     rec: np.ndarray,
     test_mask: np.ndarray,
@@ -42,17 +66,9 @@ def precision_recall_from_topk(
     order, so the first k columns are the top-k). Slots that never filled
     (idx < 0, fewer than K candidates) count as misses."""
     assert rec.shape[1] >= k, (rec.shape, k)
-    rec_k = np.asarray(rec[:, :k])
-    filled = rec_k >= 0
-    safe = np.where(filled, rec_k, 0)
-    hits = (np.take_along_axis(test_mask, safe, axis=1) & filled).sum(axis=1)
+    hits = topk_hits(rec, test_mask, k)
     n_test = test_mask.sum(axis=1)
-    valid = n_test > 0
-    if not valid.any():
-        return 0.0, 0.0
-    p_at_k = float((hits[valid] / k).mean())
-    r_at_k = float((hits[valid] / n_test[valid]).mean())
-    return p_at_k, r_at_k
+    return precision_recall_from_hits(hits, n_test, k)
 
 
 def evaluate_ranking_from_topk(rec, test_mask, ks=(5, 10)) -> dict[str, float]:
@@ -80,4 +96,20 @@ def masks_from_interactions(n_users: int, n_items: int, pairs: np.ndarray) -> np
     m = np.zeros((n_users, n_items), dtype=bool)
     if len(pairs):
         m[pairs[:, 0], pairs[:, 1]] = True
+    return m
+
+
+def masks_from_interactions_rows(
+    row_start: int, n_rows: int, n_items: int, pairs: np.ndarray
+) -> np.ndarray:
+    """Row window [row_start, row_start + n_rows) of the (I, J) interaction
+    mask, without ever building the full matrix — the streaming-evaluate
+    building block (rows equal the corresponding `masks_from_interactions`
+    rows exactly). Pairs outside the window are ignored, so out-of-range
+    windows (padded shard tails) yield all-False rows."""
+    m = np.zeros((n_rows, n_items), dtype=bool)
+    if len(pairs):
+        sel = (pairs[:, 0] >= row_start) & (pairs[:, 0] < row_start + n_rows)
+        p = pairs[sel]
+        m[p[:, 0] - row_start, p[:, 1]] = True
     return m

@@ -188,6 +188,66 @@ def serve_topk(U, V, cand, seen, k: int, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def serve_topk_window(U, Vw, cand, seen_w, k: int, *, interpret: bool = True):
+    """Tiled geo-pruned serving over pre-gathered candidate windows — the
+    million-scale replacement for `serve_topk`'s per-request full item slab.
+    U: (R, K); Vw: (R, Cw, K) the candidate windows' item factors (row r is
+    the user's v^i at exactly the `cand[r]` ids, any values in padded
+    slots); cand: (R, Cw) int32 candidate ids, -1 padded; seen_w: (R, Cw)
+    bool/int8 seen bits aligned to `cand`. Returns (vals, idx) (R, k),
+    idx = global item ids, -1 in unfilled slots.
+
+    Both compute AND staging are O(Cw·K) per request: the kernel's grid
+    streams (8, K, 128) window tiles, never touching J, so the factor
+    source (the (I, cap, K) store slab, or V rows) stays HBM-resident.
+    Bitwise identical to `serve_topk` on the same candidates: identical
+    block sizes (8, 128), K zero-padding, K-major contraction and
+    running-top-k carry — pinned by tests on tie-heavy inputs."""
+    R, K = U.shape
+    Cw = cand.shape[1]
+    BI, BJ = 8, 128
+    Up = _pad_to(_pad_to(U.astype(jnp.float32), BI, 0), 8, 1)
+    Vt = jnp.transpose(Vw.astype(jnp.float32), (0, 2, 1))   # (R, K, Cw)
+    Vt = _pad_to(_pad_to(_pad_to(Vt, BI, 0), 8, 1), LANE, 2)
+    sp = _pad_to(_pad_to(seen_w.astype(jnp.int8), LANE, 1), BI, 0)
+    cp = jnp.pad(cand.astype(jnp.int32),
+                 [(0, (-R) % BI), (0, (-Cw) % BJ)],
+                 constant_values=-1)
+    vals, idx = serve_topk_lib.serve_topk_window_kernel_call(
+        Up, Vt, sp, cp, k, block_i=BI, block_j=BJ, interpret=interpret,
+    )
+    return vals[:R], idx[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def serve_topk_window_quant(U, Vq, scale, cand, seen_w, k: int, *,
+                            interpret: bool = True):
+    """Quantized `serve_topk_window`: candidate windows as int8 codes with a
+    per-request dequant scale (codes·scale ≈ v), or bf16 factors with
+    scale = 1.0. Vq: (R, Cw, K) int8/bf16; scale: (R,) f32. Dequantization
+    runs in-VMEM per tile; everything downstream (contraction, masking,
+    top-k carry, tie contract) matches the fp32 window kernel on the
+    dequantized values bitwise."""
+    R, K = U.shape
+    Cw = cand.shape[1]
+    BI, BJ = 8, 128
+    Up = _pad_to(_pad_to(U.astype(jnp.float32), BI, 0), 8, 1)
+    Vt = jnp.transpose(Vq, (0, 2, 1))                       # (R, K, Cw)
+    Vt = _pad_to(_pad_to(_pad_to(Vt, BI, 0), 8, 1), LANE, 2)
+    # padded requests dequant with scale 1.0 (their rows are sliced off)
+    sc = jnp.pad(scale.astype(jnp.float32).reshape(-1, 1),
+                 [(0, (-R) % BI), (0, 0)], constant_values=1.0)
+    sp = _pad_to(_pad_to(seen_w.astype(jnp.int8), LANE, 1), BI, 0)
+    cp = jnp.pad(cand.astype(jnp.int32),
+                 [(0, (-R) % BI), (0, (-Cw) % BJ)],
+                 constant_values=-1)
+    vals, idx = serve_topk_lib.serve_topk_window_quant_kernel_call(
+        Up, Vt, sc, sp, cp, k, block_i=BI, block_j=BJ, interpret=interpret,
+    )
+    return vals[:R], idx[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def recommend_topk_peruser(U, V, train_mask, k: int, *, interpret: bool = True):
     """DMF serving eval: per-user item factors V (I, J, K) — each learner
     scores only his own copy v^i = p^i + q^i. Streams item tiles through a

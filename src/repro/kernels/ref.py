@@ -68,6 +68,26 @@ def serve_topk_ref(U, V, cand, seen, k):
     return masked_topk_finalize(vals, idx)
 
 
+def serve_topk_window_ref(U, Vw, cand, seen_w, k):
+    """Tiled-serving oracle over pre-gathered candidate windows: window
+    scores, pad/seen masking, dense `lax.top_k` over window positions, then
+    position→item-id remap — the exact-equality target for
+    `ops.serve_topk_window` (and, on dequantized windows, for
+    `ops.serve_topk_window_quant`).
+
+    U: (R, K); Vw: (R, Cw, K); cand: (R, Cw) int32 item ids (-1 pad);
+    seen_w: (R, Cw) bool/int8 aligned to cand. Candidate rows are ascending
+    in item id (index contract), so `top_k`'s lowest-position tie-break is
+    the same lowest-item-id tie-break the streaming kernel implements.
+    """
+    # K-major contraction (not einsum) — see serve_topk_ref
+    scores = jnp.sum(U[:, :, None] * jnp.transpose(Vw, (0, 2, 1)), axis=1)
+    scores = jnp.where((cand < 0) | (seen_w != 0), NEG_INF, scores)
+    vals, pos = jax.lax.top_k(scores, k)
+    idx = jnp.take_along_axis(jnp.maximum(cand, 0), pos, axis=1)
+    return masked_topk_finalize(vals, idx)
+
+
 def dp_clip_noise_ref(g, rid, seed, clip, noise_std):
     """DP gradient-message mechanism oracle: per-row L2 clip to ``clip``
     then additive N(0, noise_std²) noise.

@@ -11,7 +11,13 @@ deadline (or never) counts for nothing.
 
 Definitions written to every scheduler report / BENCH_scheduler.json:
 
-  offered_load_rps  n_arrivals / (last_arrival - first_arrival)
+  offered_load_rps  (n_arrivals - 1) / (last_arrival - first_arrival) —
+                    the MLE of a Poisson rate observed over the arrival
+                    window (n arrivals delimit n-1 inter-arrival gaps; the
+                    naive n/span overestimates by n/(n-1)). Degenerate
+                    runs (a single arrival, or all arrivals simultaneous)
+                    fall back to n / horizon so a 1-request run reports
+                    its actual (non-zero) load instead of 0.0.
   goodput_rps       n_served_within_deadline / horizon,
                     horizon = last_completion - first_arrival
   slo_attainment    n_served_within_deadline / n_arrivals  (rejected and
@@ -100,7 +106,18 @@ def summarize(records: list[RequestRecord],
         if n else 0.0)
     out["expired_frac"] = out["n_expired"] / n if n else 0.0
     if n >= 2 and arrivals.max() > arrivals.min():
+        # MLE Poisson rate over the observed arrival window (see module
+        # docstring): n arrivals delimit n-1 gaps.
         out["offered_load_rps"] = float((n - 1) / (arrivals.max() - arrivals.min()))
+    elif n >= 1:
+        # Degenerate window (single request, or all arrivals at the same
+        # instant): the arrival span carries no rate information, so fall
+        # back to n / serving horizon — a 1-request run that completed in
+        # 50 ms offered 20 rps, not 0.0.
+        horizon = (max((r.completion for r in served), default=float("nan"))
+                   - float(arrivals.min()))
+        out["offered_load_rps"] = (
+            float(n / horizon) if served and horizon > 0 else 0.0)
     else:
         out["offered_load_rps"] = 0.0
     if served:

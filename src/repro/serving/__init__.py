@@ -1,22 +1,38 @@
 # Serving subsystem: decentralized POI recommendation over trained DMFState.
 #   candidates.py — city-bucketed candidate index (paper Fig. 2 pruning)
+#                   + hierarchical geohash-cell index for million-user scale
 #   engine.py     — microbatched ServingEngine (one jitted dispatch per batch)
+#   store.py      — HBM-resident tiled factor store + quantized engine (1M users)
 #   online.py     — Eq. 9-11 online factor refresh from streamed check-ins
 from repro.serving.candidates import (
     CandidateIndex,
+    HierarchicalIndex,
     build_candidate_index,
+    build_hierarchical_index,
     index_from_dataset,
 )
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.online import OnlineConfig, RefreshReport, online_refresh
+from repro.serving.store import (
+    SyntheticFactors,
+    TiledFactorStore,
+    TiledServingEngine,
+    synthetic_world,
+)
 
 __all__ = [
     "CandidateIndex",
+    "HierarchicalIndex",
     "build_candidate_index",
+    "build_hierarchical_index",
     "index_from_dataset",
     "ServingConfig",
     "ServingEngine",
     "OnlineConfig",
     "RefreshReport",
     "online_refresh",
+    "SyntheticFactors",
+    "TiledFactorStore",
+    "TiledServingEngine",
+    "synthetic_world",
 ]

@@ -64,15 +64,34 @@ class CandidateIndex:
         the geo-pruned candidate set is lossless for that user."""
         return (self.city_size == self.bucket_size)[self.user_bucket]
 
-    def eligible_mask(self, users: np.ndarray) -> np.ndarray:
-        """(len(users), J) bool — candidate-eligibility rows, the dense-oracle
-        counterpart of the bucket gather (tests / ref path)."""
+    def eligible_mask_chunks(self, users: np.ndarray, rows_per_chunk: int = 256):
+        """Yield ``(row_start, mask_chunk)`` over ``users`` in order, each
+        chunk a dense (≤rows_per_chunk, J) bool eligibility block. This is
+        the J=100k-safe oracle path: peak memory is O(rows_per_chunk · J)
+        instead of O(len(users) · J), so dense-reference comparisons still
+        run at million-user scale."""
         users = np.asarray(users)
-        elig = np.zeros((len(users), self.n_items), dtype=bool)
-        for row, u in enumerate(users):
-            items = self.bucket_items[self.user_bucket[u]]
-            elig[row, items[items >= 0]] = True
-        return elig
+        for s in range(0, len(users), rows_per_chunk):
+            chunk = users[s : s + rows_per_chunk]
+            items = self.bucket_items[self.user_bucket[chunk]]   # (r, cap)
+            rows, cols = np.nonzero(items >= 0)
+            elig = np.zeros((len(chunk), self.n_items), dtype=bool)
+            elig[rows, items[rows, cols]] = True
+            yield s, elig
+
+    def eligible_mask(self, users: np.ndarray,
+                      rows_per_chunk: int | None = None) -> np.ndarray:
+        """(len(users), J) bool — candidate-eligibility rows, the dense-oracle
+        counterpart of the bucket gather (tests / ref path). Built by
+        vectorized scatter in row chunks (`eligible_mask_chunks`); the
+        result is still dense — callers at J=100k scale should consume the
+        chunk generator instead of materializing all rows."""
+        users = np.asarray(users)
+        out = np.zeros((len(users), self.n_items), dtype=bool)
+        step = rows_per_chunk or max(len(users), 1)
+        for s, elig in self.eligible_mask_chunks(users, step):
+            out[s : s + len(elig)] = elig
+        return out
 
 
 def build_candidate_index(
@@ -88,15 +107,36 @@ def build_candidate_index(
     (default: the largest city, rounded up to ``pad_to`` — lossless);
     ``item_priority`` (higher = kept first, e.g. popularity counts) decides
     what survives truncation when a city overflows ``cap``."""
-    item_city = np.asarray(item_city)
-    user_city = np.asarray(user_city)
+    item_city = np.asarray(item_city).reshape(-1)
+    user_city = np.asarray(user_city).reshape(-1)
     J = int(n_items) if n_items is not None else int(len(item_city))
     assert len(item_city) == J, (len(item_city), J)
-    C = int(item_city.max()) + 1 if len(item_city) else 1
-    assert user_city.min() >= 0 and int(user_city.max()) < C, "user city out of range"
+    # Bucket count covers BOTH label arrays: a city can legally hold users
+    # but zero POIs (common at 100k-POI scale — sparse cities). Those users
+    # get an all-empty bucket, which the engine routes to the popularity
+    # fallback instead of crashing here. Empty label arrays (no users yet /
+    # no items yet) build a valid one-empty-bucket index without touching
+    # `.min()`/`.max()` on an empty array.
+    if len(item_city):
+        assert int(item_city.min()) >= 0, "negative item city"
+    if len(user_city):
+        assert int(user_city.min()) >= 0, "negative user city"
+    C = max(
+        int(item_city.max()) + 1 if len(item_city) else 0,
+        int(user_city.max()) + 1 if len(user_city) else 0,
+        1,
+    )
 
-    buckets = [np.flatnonzero(item_city == c) for c in range(C)]
-    city_size = np.array([len(b) for b in buckets], dtype=np.int32)
+    # group items by city via one stable sort — ascending item id within
+    # each city falls out of stability, and build cost stays O(J log J)
+    # at J=100k instead of the O(C·J) per-city scan
+    order = np.argsort(item_city, kind="stable") if len(item_city) else (
+        np.empty(0, dtype=np.int64))
+    sorted_city = item_city[order]
+    starts = np.searchsorted(sorted_city, np.arange(C), side="left")
+    ends = np.searchsorted(sorted_city, np.arange(C), side="right")
+    buckets = [order[s:e] for s, e in zip(starts, ends)]
+    city_size = (ends - starts).astype(np.int32)
     max_city = int(city_size.max()) if C else 0
     if cap is None:
         cap = max_city
@@ -127,4 +167,134 @@ def index_from_dataset(ds, **kw) -> CandidateIndex:
     """Convenience: index straight from a `synthetic_poi.POIDataset`."""
     return build_candidate_index(
         ds.item_city, ds.user_city, n_items=ds.n_items, **kw
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalIndex:
+    """Geohash-style refinement of the flat city buckets (see
+    `build_hierarchical_index`). ``flat`` is a normal `CandidateIndex` whose
+    buckets are the LEAF CELLS — it plugs into the engine/store unchanged;
+    the extra arrays describe the hierarchy for reporting and routing."""
+    flat: CandidateIndex
+    cell_of_item: np.ndarray    # (J,) int32 leaf cell per item
+    cell_of_user: np.ndarray    # (I,) int32 leaf cell per user
+    cell_city: np.ndarray       # (n_cells,) int32 source city of each cell
+    cell_depth: np.ndarray      # (n_cells,) int32 splits below the city root
+
+    @property
+    def n_cells(self) -> int:
+        return int(len(self.cell_city))
+
+    @property
+    def max_depth(self) -> int:
+        return int(self.cell_depth.max()) if len(self.cell_depth) else 0
+
+    def stats(self) -> dict:
+        """Reporting block for benches: how much the hierarchy shrank the
+        serving cap relative to flat city bucketing."""
+        depth = self.cell_depth
+        return {
+            "n_cells": self.n_cells,
+            "max_depth": self.max_depth,
+            "mean_depth": float(depth.mean()) if len(depth) else 0.0,
+            "cap": self.flat.cap,
+            "n_empty_cells": int((self.flat.bucket_size == 0).sum()),
+            "mean_cell_items": float(self.flat.bucket_size.mean()),
+        }
+
+
+def build_hierarchical_index(
+    item_city: np.ndarray,
+    user_city: np.ndarray,
+    item_coords: np.ndarray,
+    user_coords: np.ndarray,
+    *,
+    cell_cap: int = 128,
+    cap: int | None = None,
+    pad_to: int = LANE,
+    max_depth: int = 16,
+    item_priority: np.ndarray | None = None,
+) -> HierarchicalIndex:
+    """Layer a geohash-style spatial hierarchy on the flat city buckets.
+
+    Flat city bucketing pads every user's candidate window to the LARGEST
+    city — at 1M users / 100k POIs with a zipf city-size law the big-city
+    cap is thousands, which makes the per-user store slab (I, cap, K)
+    physically impossible. This builder recursively halves any city holding
+    more than ``cell_cap`` POIs at the midpoint of its item bounding box,
+    alternating lon/lat per level (exactly the bit-interleaving order of a
+    geohash), until every leaf cell fits ``cell_cap`` or ``max_depth`` is
+    reached. Users follow the same splits by their own coordinates, so each
+    user's candidate set becomes the POIs of their geohash cell — a refined
+    subset of their home city (the paper's Fig. 2 location-aggregation
+    argument, applied one more level down).
+
+    The output is a plain `CandidateIndex` over leaf cells (built by
+    `build_candidate_index`, so the ascending-id tie contract and the
+    fixed-shape table survive) plus the hierarchy metadata. Leaf cells with
+    users but no POIs are legal and route to the popularity fallback, same
+    as cold cities in the flat index. Degenerate geometry (all items at one
+    point) stops splitting early; such oversized leaves are truncated by
+    priority in the flat builder and reported as truncation there.
+    """
+    item_city = np.asarray(item_city).reshape(-1)
+    user_city = np.asarray(user_city).reshape(-1)
+    item_coords = np.asarray(item_coords, dtype=np.float64).reshape(-1, 2)
+    user_coords = np.asarray(user_coords, dtype=np.float64).reshape(-1, 2)
+    J, I = len(item_city), len(user_city)
+    assert item_coords.shape == (J, 2), (item_coords.shape, J)
+    assert user_coords.shape == (I, 2), (user_coords.shape, I)
+    n_cities = max(
+        int(item_city.max()) + 1 if J else 0,
+        int(user_city.max()) + 1 if I else 0,
+        1,
+    )
+    cell_of_item = np.zeros(J, dtype=np.int32)
+    cell_of_user = np.zeros(I, dtype=np.int32)
+    cell_city: list[int] = []
+    cell_depth: list[int] = []
+
+    def emit(cell_items: np.ndarray, cell_users: np.ndarray,
+             city: int, depth: int) -> None:
+        cid = len(cell_city)
+        cell_of_item[cell_items] = cid
+        cell_of_user[cell_users] = cid
+        cell_city.append(city)
+        cell_depth.append(depth)
+
+    for c in range(n_cities):
+        items_c = np.flatnonzero(item_city == c)
+        users_c = np.flatnonzero(user_city == c)
+        if len(items_c) == 0 and len(users_c) == 0:
+            continue
+        stack = [(items_c, users_c, 0)]
+        while stack:
+            it, us, depth = stack.pop()
+            if len(it) <= cell_cap or depth >= max_depth:
+                emit(it, us, c, depth)
+                continue
+            ax = depth % 2                      # alternate lon/lat per level
+            lo = item_coords[it, ax].min()
+            hi = item_coords[it, ax].max()
+            mid = 0.5 * (lo + hi)
+            left_i = item_coords[it, ax] <= mid
+            if left_i.all() or not left_i.any():
+                emit(it, us, c, depth)          # degenerate: co-located POIs
+                continue
+            left_u = user_coords[us, ax] <= mid
+            stack.append((it[left_i], us[left_u], depth + 1))
+            stack.append((it[~left_i], us[~left_u], depth + 1))
+
+    flat = build_candidate_index(
+        cell_of_item if J else np.empty(0, np.int32),
+        cell_of_user if I else np.empty(0, np.int32),
+        n_items=J, cap=cap, pad_to=pad_to, item_priority=item_priority,
+    )
+    return HierarchicalIndex(
+        flat=flat,
+        cell_of_item=cell_of_item,
+        cell_of_user=cell_of_user,
+        cell_city=np.asarray(cell_city, dtype=np.int32),
+        cell_depth=np.asarray(cell_depth, dtype=np.int32),
     )

@@ -12,11 +12,14 @@ Request path:
    fixed-shape batches of ``ServingConfig.microbatch`` (the tail batch is
    padded with a repeated real id, results sliced off). Fixed shapes mean
    exactly one compiled dispatch per microbatch, ever.
-2. **Dispatch** — one jitted call: gather (U[uids], V[uids], seen[uids]),
-   route each request to its home-city candidate bucket
-   (`candidates.CandidateIndex`), and run the fused Pallas serve kernel
-   (`ops.serve_topk`: gather bucket → per-user scores → running top-k in
-   one VMEM pass). Per-request cost is O(cap·K), not O(J·K).
+2. **Dispatch** — one jitted call: route each request to its home-city
+   candidate bucket (`candidates.CandidateIndex`), gather ONLY the
+   (R, cap, K) candidate windows out of the HBM-resident factor buffers
+   (never a per-request (R, J, K) item slab), and run the tiled Pallas
+   serve kernel (`ops.serve_topk_window`: window scores → running top-k,
+   streamed in (8, K, 128) VMEM tiles). Per-request cost AND staging are
+   O(cap·K), not O(J·K) — the property that lets `serving/store.py` push
+   the same dispatch to 1M users × 100k POIs.
 3. **Online refresh** — ``ingest()`` streams new check-ins through
    `serving/online.py` (Eq. 9-11 local steps + neighbor-table scatter),
    then patches only the touched rows of the served V = P + Q view and the
@@ -97,15 +100,18 @@ class EngineStats:
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def _dispatch_pruned(U, V, seen, bucket_items, user_bucket, uids, *,
                      k: int, interpret: bool):
-    """One geo-pruned microbatch: per-learner factor gather + bucket routing
-    + fused serve kernel, a single compiled dispatch. The dispatch is
-    read-only over the persistent factor buffers, so nothing is donatable
+    """One geo-pruned microbatch: candidate-window gather + tiled serve
+    kernel, a single compiled dispatch. Only the (R, cap, K) candidate
+    windows are staged out of the HBM-resident factor buffer — never the
+    (R, J, K) per-request item slab the pre-tiled path copied. The dispatch
+    is read-only over the persistent factor buffers, so nothing is donatable
     here; the state-mutating path (online refresh) donates U/P/Q instead."""
     u = U[uids]                                   # (R, K)   own user factor
-    v = V[uids]                                   # (R, J, K) own item view
-    s = seen[uids]                                # (R, J)   own seen-filter
-    cand = bucket_items[user_bucket[uids]]        # (R, cap) home-city bucket
-    return ops.serve_topk(u, v, cand, s, k, interpret=interpret)
+    cand = bucket_items[user_bucket[uids]]        # (R, cap) home bucket
+    safe = jnp.maximum(cand, 0)                   # pad-safe gather
+    vw = V[uids[:, None], safe]                   # (R, cap, K) windows only
+    sw = seen[uids[:, None], safe]                # (R, cap) window seen bits
+    return ops.serve_topk_window(u, vw, cand, sw, k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
@@ -123,13 +129,18 @@ def _dispatch_rows(U, P, Q, seen, bucket_items, user_bucket, uids, *,
     of the same rows is bitwise identical to gathering a precomputed V).
     This is the `serve_microbatch` dispatch — it never touches the sharded
     device views, so one shard's queue can be served without the SPMD
-    lockstep over the whole mesh."""
+    lockstep over the whole mesh. The pruned path gathers only the
+    (R, cap, K) candidate windows straight out of P/Q (gather-then-add of
+    the same elements is bitwise identical to windowing a precomputed V)."""
     u = U[uids]
-    v = P[uids] + Q[uids]
-    s = seen[uids]
     if prune:
         cand = bucket_items[user_bucket[uids]]
-        return ops.serve_topk(u, v, cand, s, k, interpret=interpret)
+        safe = jnp.maximum(cand, 0)
+        vw = P[uids[:, None], safe] + Q[uids[:, None], safe]   # (R, cap, K)
+        sw = seen[uids[:, None], safe]
+        return ops.serve_topk_window(u, vw, cand, sw, k, interpret=interpret)
+    v = P[uids] + Q[uids]
+    s = seen[uids]
     return ops.recommend_topk_peruser(u, v, s, k, interpret=interpret)
 
 
@@ -147,11 +158,16 @@ def _make_sharded_dispatch(mesh, *, k: int, interpret: bool, prune: bool):
 
     def body(U, V, seen, user_bucket, bucket_items, uids):
         u_l = uids[0]                        # (R,) local row ids
-        u, v, s = U[u_l], V[u_l], seen[u_l]
+        u = U[u_l]
         if prune:
             cand = bucket_items[user_bucket[u_l]]
-            return ops.serve_topk(u, v, cand, s, k, interpret=interpret)
-        return ops.recommend_topk_peruser(u, v, s, k, interpret=interpret)
+            safe = jnp.maximum(cand, 0)
+            vw = V[u_l[:, None], safe]       # (R, cap, K) windows only
+            sw = seen[u_l[:, None], safe]
+            return ops.serve_topk_window(u, vw, cand, sw, k,
+                                         interpret=interpret)
+        return ops.recommend_topk_peruser(
+            u, V[u_l], seen[u_l], k, interpret=interpret)
 
     return jax.jit(shard_map(
         body, mesh=mesh,

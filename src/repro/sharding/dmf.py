@@ -62,6 +62,18 @@ def rows_per_shard(n_users: int, n_shards: int) -> int:
     return -(-n_users // n_shards)
 
 
+def shard_row_slices(n_rows: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous [start, end) UNPADDED row ranges per shard under the same
+    ceil-div layout as `rows_per_shard` (the trailing shards may be short or
+    empty). The serving factor store's host-level row sharding
+    (`serving/store.py shard_rows`) slices its HBM-resident slabs along
+    these, so its request routing agrees with the SPMD engine's
+    ``user // rows_per_shard`` rule."""
+    rows = rows_per_shard(n_rows, n_shards)
+    return [(min(d * rows, n_rows), min((d + 1) * rows, n_rows))
+            for d in range(n_shards)]
+
+
 @functools.lru_cache(maxsize=None)
 def make_learner_mesh(n_shards: int) -> Mesh:
     """1-D ``learners`` mesh over the first n_shards local devices. On a CPU
@@ -543,35 +555,86 @@ def train_epoch_sharded(
 def evaluate_sharded(
     state: dmf_lib.DMFState, train: np.ndarray, test: np.ndarray,
     n_users: int, n_items: int, n_shards: int, ks=(5, 10),
-    interpret: bool = True,
+    interpret: bool = True, chunk_users: int | None = None,
 ) -> dict[str, float]:
     """`dmf.evaluate` over the learner mesh: each shard streams its own
     users' (rows, J, K) factors through the per-user top-k kernel; results
     concatenate along the learner axis. Bit-identical to the single-device
-    kernel per user (row-parallel, no cross-shard reads)."""
+    kernel per user (row-parallel, no cross-shard reads).
+
+    ``chunk_users`` bounds the per-shard rows staged per dispatch: the
+    evaluation walks local row windows of that width across all shards at
+    once, building each window's V = P + Q view and train/test mask rows on
+    the fly — the full (I, J, K) V and (I, J) masks never co-materialize
+    with the factors. Results are identical to the unchunked path (per-user
+    hit counts are integers, reduced once at the end)."""
     from repro.kernels import ops
 
     mesh = make_learner_mesh(n_shards)
     rows = rows_per_shard(n_users, n_shards)
     I_pad = rows * n_shards
     kmax = max(ks)
-    train_mask = metrics_lib.masks_from_interactions(n_users, n_items, train)
-    test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
     st = unpad_state(state, n_users)
-    U = pad_rows(st.U, I_pad)
-    V = pad_rows(st.P + st.Q, I_pad)
-    mask = pad_rows(jnp.asarray(train_mask.astype(np.int8)), I_pad)
 
     def body(U_loc, V_loc, m_loc):
         return ops.recommend_topk_peruser(
             U_loc, V_loc, m_loc, kmax, interpret=interpret)
 
-    vals, idx = jax.jit(shard_map(
+    dispatch = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS)),
         check_vma=False,
-    ))(U, V, mask)
-    del vals
-    return metrics_lib.evaluate_ranking_from_topk(
-        np.asarray(idx)[:n_users], test_mask, ks)
+    ))
+
+    if chunk_users is None:
+        train_mask = metrics_lib.masks_from_interactions(
+            n_users, n_items, train)
+        test_mask = metrics_lib.masks_from_interactions(n_users, n_items, test)
+        U = pad_rows(st.U, I_pad)
+        V = pad_rows(st.P + st.Q, I_pad)
+        mask = pad_rows(jnp.asarray(train_mask.astype(np.int8)), I_pad)
+        _, idx = dispatch(U, V, mask)
+        return metrics_lib.evaluate_ranking_from_topk(
+            np.asarray(idx)[:n_users], test_mask, ks)
+
+    rc = min(max(int(chunk_users), 1), rows)
+    hits: dict[int, list[np.ndarray]] = {k: [] for k in ks}
+    n_test_parts: list[np.ndarray] = []
+    order_parts: list[np.ndarray] = []
+    for t in range(0, rows, rc):
+        width = min(rc, rows - t)
+        U_parts, V_parts, m_parts, ts_parts, gids = [], [], [], [], []
+        for d in range(n_shards):
+            g0 = d * rows + t
+            ids = np.arange(g0, g0 + width)
+            safe = jnp.asarray(np.minimum(ids, max(n_users - 1, 0)))
+            U_parts.append(st.U[safe])
+            V_parts.append(st.P[safe] + st.Q[safe])
+            m_parts.append(metrics_lib.masks_from_interactions_rows(
+                g0, width, n_items, train))
+            ts_parts.append(metrics_lib.masks_from_interactions_rows(
+                g0, width, n_items, test))
+            gids.append(ids)
+        _, idx = dispatch(
+            jnp.concatenate(U_parts), jnp.concatenate(V_parts),
+            jnp.asarray(np.concatenate(m_parts).astype(np.int8)))
+        rec = np.asarray(idx)
+        ts = np.concatenate(ts_parts)
+        ids = np.concatenate(gids)
+        real = ids < n_users
+        for k in ks:
+            hits[k].append(metrics_lib.topk_hits(rec, ts, k)[real])
+        n_test_parts.append(ts.sum(axis=1)[real])
+        order_parts.append(ids[real])
+    # windows interleave shards — restore global user order so the float
+    # reduction matches the unchunked mean exactly
+    order = np.argsort(np.concatenate(order_parts), kind="stable")
+    n_test = np.concatenate(n_test_parts)[order]
+    out = {}
+    for k in ks:
+        p, r = metrics_lib.precision_recall_from_hits(
+            np.concatenate(hits[k])[order], n_test, k)
+        out[f"P@{k}"] = p
+        out[f"R@{k}"] = r
+    return out

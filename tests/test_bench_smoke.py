@@ -114,16 +114,31 @@ def test_bench_serving_tiny_schema(bench_outdir):
     res = serving_bench.main(tiny=True)
     for key in ("config", "requests_per_sec", "latency_ms",
                 "speedup_pruned_vs_loop",
-                "pruned_dense_topk_agreement_where_in_bucket", "sharded"):
+                "pruned_dense_topk_agreement_where_in_bucket", "sharded",
+                "tiled_kernel_bit_identical_vs_slab", "million"):
         assert key in res, key
     for path in ("loop_per_request", "batched_dense", "batched_pruned"):
         assert res["requests_per_sec"][path] > 0
+    assert res["tiled_kernel_bit_identical_vs_slab"] is True
     sh = res["sharded"]
     ran = {k: v for k, v in sh["requests_per_sec"].items() if v is not None}
     assert ran, "no sharded serving entries ran"
     for k, rps in ran.items():
         assert rps > 0
         assert sh["exact_match_vs_single_shard"][k] == 1.0, k
+    # million-user tiled-store section (toy-scale under tiny): exactness
+    # flags and quantization deltas are contractual fields
+    mil = res["million"]
+    for key in ("config", "index", "build_seconds", "resident_gb",
+                "requests_per_sec", "fallback_frac", "exact"):
+        assert key in mil, key
+    assert mil["exact"]["fp32_bitwise_vs_dense_engine"] is True
+    for mode in ("fp32", "int8", "bf16"):
+        assert mil["requests_per_sec"][mode] > 0
+    for mode in ("int8", "bf16"):
+        q = mil["exact"][mode]
+        assert q["max_abs_score_delta"] <= q["analytic_bound_max"] + 1e-6
+        assert 0.0 <= q["topk_overlap_vs_fp32"] <= 1.0
     _assert_finite(res)
     assert _assert_mirrored("BENCH_serving", bench_outdir) == json.loads(
         json.dumps(res, default=float))

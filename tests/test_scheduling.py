@@ -302,3 +302,39 @@ def test_summarize_empty_and_slo_accounting():
     assert s["goodput_rps"] == pytest.approx(1 / 0.020)
     assert s["p99_slo_met"] is False
     assert s["latency_ms"]["p99_ms"] > 10.0
+
+
+def test_offered_load_is_gap_mle_and_matches_docstring():
+    """Regression: the docstring used to claim n/span while the code
+    computed (n-1)/span — the definition is now pinned to the gap MLE.
+    3 arrivals over 1 s = 2 inter-arrival gaps = 2 rps, not 3."""
+    recs = [
+        RequestRecord(rid=i, user=i, shard=0, arrival=0.5 * i,
+                      deadline=float("inf"), status=SERVED,
+                      dispatch_start=0.5 * i, completion=0.5 * i + 0.01)
+        for i in range(3)
+    ]
+    s = summarize(recs)
+    assert s["offered_load_rps"] == pytest.approx(2 / 1.0)
+    from repro.scheduling import metrics as sched_metrics
+    assert "(n_arrivals - 1)" in sched_metrics.__doc__
+
+
+def test_offered_load_single_arrival_reports_nonzero():
+    """Regression: a 1-request run used to report offered_load_rps == 0.0
+    (no arrival span); it now falls back to n / serving horizon."""
+    one = [RequestRecord(rid=0, user=0, shard=0, arrival=1.0, deadline=2.0,
+                         status=SERVED, dispatch_start=1.0, completion=1.05)]
+    s = summarize(one)
+    assert s["offered_load_rps"] == pytest.approx(1 / 0.05)
+    # simultaneous arrivals (zero span) use the same fallback
+    burst = [
+        RequestRecord(rid=i, user=i, shard=0, arrival=0.0, deadline=1.0,
+                      status=SERVED, dispatch_start=0.0, completion=0.25)
+        for i in range(4)
+    ]
+    assert summarize(burst)["offered_load_rps"] == pytest.approx(4 / 0.25)
+    # a single never-served request still degrades to 0.0, not NaN
+    lost = [RequestRecord(rid=0, user=0, shard=0, arrival=0.0, deadline=0.1,
+                          status=EXPIRED)]
+    assert summarize(lost)["offered_load_rps"] == 0.0
