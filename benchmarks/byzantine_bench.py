@@ -1,0 +1,251 @@
+"""Byzantine-robustness benchmark: attack injection vs receiver-side
+defenses on the gradient-exchange channel (ISSUE 9 tentpole).
+
+Three questions, answered on the synthetic Foursquare config:
+
+1. **Attack × defense grid** — final train loss for every attack family
+   (NaN bomb, norm inflation, sign flip, targeted shilling) under no
+   defense, screening only, and screening + trimmed-mean aggregation, at
+   20% malicious learners. Non-finite collapses are recorded as
+   ``final_train_loss: null`` + ``nonfinite: true`` (the sentinel halts
+   them), never as NaN in the JSON.
+2. **Headline contract** — undefended norm-inflation must collapse the
+   run (loss ratio ≥ 5× fault-free, or outright non-finite) while the
+   screened + trimmed run at the same 20% malicious stays within 1.5× of
+   fault-free; screening itself must cost ≤ 15% epoch throughput.
+3. **DP interaction** — with the mechanism on, the screening cap τ is
+   calibrated from (dp_clip, dp_sigma) via `privacy.screening_threshold`
+   so HONEST noised messages pass (pass rate replayed over an observed
+   message log), and the defended-under-attack loss stays bounded.
+
+Writes ``BENCH_byzantine.json`` (repo root + benchmarks/results mirror):
+
+    PYTHONPATH=src python -m benchmarks.run --only byzantine
+
+CI runs the assertion-only fast path (no JSON written):
+
+    PYTHONPATH=src python -m benchmarks.byzantine_bench --byzantine-smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.privacy import audit, screening_threshold
+from repro.robustness.byzantine import AttackConfig, DefenseConfig
+
+FRAC = 0.2           # malicious fraction the headline contract is stated at
+INFLATE = 100.0      # norm-inflation factor λ for the collapse demonstration
+FAMILIES = ("nan", "norm_inflate", "sign_flip", "shill")
+
+
+def _defenses(tau: float) -> dict:
+    return {
+        "undefended": None,
+        "screen": DefenseConfig(screen=True, norm_cap=tau),
+        "screen_trim": DefenseConfig(screen=True, norm_cap=tau,
+                                     aggregation="trim", trim_frac=0.25),
+    }
+
+
+def _attack(family: str, seed: int = 11) -> AttackConfig:
+    scale = INFLATE if family == "norm_inflate" else 5.0
+    return AttackConfig(family=family, frac=FRAC, scale=scale,
+                        target_item=0, seed=seed)
+
+
+def _fit_row(cfg, train, nbr, epochs, anchor_loss, attack, defense):
+    """One grid point, divergence-safe: the sentinel halts a collapsed run
+    and the row reports null loss + the halt epoch instead of NaN."""
+    res = dmf.fit(cfg, train, nbr, epochs=epochs, attack=attack,
+                  defense=defense, on_nonfinite="halt")
+    loss = float(res.train_losses[-1])
+    nonfinite = not np.isfinite(loss) or res.diverged_at is not None
+    return {
+        "final_train_loss": None if nonfinite else loss,
+        "loss_ratio_vs_faultfree": None if nonfinite else loss / anchor_loss,
+        "nonfinite": bool(nonfinite),
+        "halted_at": res.diverged_at,
+    }
+
+
+def _time_epochs(cfg, train, nbr, n_timed, variants, repeats=3):
+    """Best-of-``repeats`` epochs/sec per variant through full `fit` runs,
+    so the byz host precompute (attack realization, bucket assignment) is
+    inside the measured path — that IS the defense's overhead story.
+    Variants are interleaved round-robin inside each repeat: container CPU
+    shares drift on a minutes scale, and timing each variant as its own
+    back-to-back block skewed the overhead ratio by up to ~30% run-to-run;
+    inside one round-robin cycle every variant sees the same conditions."""
+    best = {name: float("inf") for name in variants}
+    for defense in variants.values():                                # warm
+        res = dmf.fit(cfg, train, nbr, epochs=1, defense=defense)
+        jax.block_until_ready(res.state.U)
+    for _ in range(repeats):
+        for name, defense in variants.items():
+            t0 = time.perf_counter()
+            res = dmf.fit(cfg, train, nbr, epochs=n_timed, defense=defense)
+            jax.block_until_ready(res.state.U)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: n_timed / b for name, b in best.items()}
+
+
+def main(full: bool = False, tiny: bool = False, n_timed: int = 4,
+         epochs: int | None = None) -> dict:
+    if tiny:
+        ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+            n_users=192, n_items=96, n_ratings=1200, n_cities=4))
+        epochs = epochs or 6
+    else:
+        ds = synthetic_poi.foursquare_like(reduced=not full)
+        epochs = epochs or (60 if full else 30)
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                        beta=0.1, gamma=0.01)
+
+    # fault-free anchor; byz-kwargs-off must reproduce it bit-exactly (the
+    # live wiring check mirroring churn_bench's trivial-plan anchor)
+    plain = dmf.fit(cfg, ds.train, nbr, epochs=epochs)
+    anchor_loss = float(plain.train_losses[-1])
+    off = dmf.fit(cfg, ds.train, nbr, epochs=epochs, attack=None,
+                  defense=None)
+    anchor_gap = float(off.train_losses[-1] - anchor_loss)
+
+    # without DP there is no mechanism to calibrate against: the grid uses
+    # an empirical cap from the honest message stream (p99.9 honest norm —
+    # an operator-chosen cap, exactly what a deployment without DP has)
+    log = audit.observe_messages(cfg, ds.train, nbr, epochs=1, seed=0)
+    tau = float(np.quantile(np.linalg.norm(log.gp, axis=1), 0.999) * 1.5)
+
+    grid = []
+    for family in FAMILIES:
+        for dname, dfn in _defenses(tau).items():
+            row = {"family": family, "defense": dname, "frac": FRAC,
+                   **_fit_row(cfg, ds.train, nbr, epochs, anchor_loss,
+                              _attack(family), dfn)}
+            grid.append(row)
+
+    def _cell(family, defense):
+        return next(r for r in grid
+                    if r["family"] == family and r["defense"] == defense)
+
+    und = _cell("norm_inflate", "undefended")
+    dfd = _cell("norm_inflate", "screen_trim")
+    undefended_collapsed = bool(
+        und["nonfinite"] or und["loss_ratio_vs_faultfree"] >= 5.0)
+    defended_ok = bool(
+        not dfd["nonfinite"] and dfd["loss_ratio_vs_faultfree"] <= 1.5)
+
+    # screening overhead: defense on (no attack), against the plain scan
+    eps = _time_epochs(cfg, ds.train, nbr, n_timed, {
+        "sparse_scan": None,
+        "screen": DefenseConfig(screen=True, norm_cap=tau),
+        "screen_trim": DefenseConfig(screen=True, norm_cap=tau,
+                                     aggregation="trim", trim_frac=0.25),
+    })
+    eps_plain, eps_screen, eps_trim = (
+        eps["sparse_scan"], eps["screen"], eps["screen_trim"])
+    screening_overhead = eps_plain / eps_screen - 1.0
+
+    # DP interaction: calibrated τ keeps honest noised traffic flowing
+    # while the defended attacked run stays bounded
+    dp_cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=10,
+                           beta=0.1, gamma=0.01, dp_sigma=0.5, dp_clip=1.0,
+                           dp_seed=3)
+    dp_tau = screening_threshold(dp_cfg, dp_cfg.dim, reject_prob=1e-6)
+    dp_log = audit.observe_messages(dp_cfg, ds.train, nbr, epochs=1, seed=0)
+    dp_screen = audit.screening_report(dp_log, dp_tau, reject_prob=1e-6)
+    dp_anchor = dmf.fit(dp_cfg, ds.train, nbr, epochs=epochs)
+    dp_defended = _fit_row(
+        dp_cfg, ds.train, nbr, epochs, float(dp_anchor.train_losses[-1]),
+        _attack("norm_inflate"),
+        DefenseConfig(screen=True, norm_cap=dp_tau,
+                      aggregation="trim", trim_frac=0.25))
+
+    res = {
+        "config": {
+            "n_users": ds.n_users, "n_items": ds.n_items, "dim": 10,
+            "n_train": int(len(ds.train)), "epochs": epochs,
+            "malicious_frac": FRAC, "inflate_scale": INFLATE,
+            "families": list(FAMILIES), "norm_cap": tau,
+        },
+        "anchor": {
+            "train_loss_final": anchor_loss,
+            "byz_off_gap": anchor_gap,     # must be exactly 0.0
+        },
+        "grid": grid,
+        "headline": {
+            "undefended_collapse_ratio": und["loss_ratio_vs_faultfree"],
+            "undefended_nonfinite": und["nonfinite"],
+            "undefended_collapsed": undefended_collapsed,
+            "defended_ratio": dfd["loss_ratio_vs_faultfree"],
+            "defended_within_1p5x": defended_ok,
+        },
+        "epochs_per_sec": {
+            "sparse_scan": eps_plain,
+            "screen": eps_screen,
+            "screen_trim": eps_trim,
+        },
+        "screening_overhead_vs_base": screening_overhead,
+        "robust_agg_overhead_vs_base": eps_plain / eps_trim - 1.0,
+        "dp_interaction": {
+            "dp_sigma": dp_cfg.dp_sigma, "dp_clip": dp_cfg.dp_clip,
+            "tau_calibrated": dp_tau,
+            "honest_pass_rate": dp_screen["pass_rate"],
+            "calibrated_reject_prob": dp_screen["calibrated_reject_prob"],
+            "defended_ratio": dp_defended["loss_ratio_vs_faultfree"],
+            "defended_nonfinite": dp_defended["nonfinite"],
+        },
+    }
+    common.save_json("BENCH_byzantine", res)   # mirrors to repo root
+    return res
+
+
+def byzantine_smoke() -> dict:
+    """The CI fast path: toy sizes, assertions live, nothing written."""
+    res = main(tiny=True, n_timed=1, epochs=5)
+    assert res["anchor"]["byz_off_gap"] == 0.0, (
+        "byz-kwargs-off drifted from the plain run")
+    assert res["headline"]["undefended_collapsed"], (
+        "undefended norm inflation failed to collapse training")
+    assert res["headline"]["defended_within_1p5x"], (
+        "screen+trim defense failed its 1.5x envelope")
+    nan_def = next(r for r in res["grid"] if r["family"] == "nan"
+                   and r["defense"] == "screen")
+    assert not nan_def["nonfinite"], "screening let a NaN bomb through"
+    assert res["dp_interaction"]["honest_pass_rate"] >= 0.999, (
+        "calibrated tau rejects honest DP traffic")
+    return {
+        "headline": res["headline"],
+        "screening_overhead_vs_base": res["screening_overhead_vs_base"],
+        "dp_interaction": res["dp_interaction"],
+        "ok": True,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale dataset + more epochs")
+    ap.add_argument("--tiny", action="store_true",
+                    help="toy sizes (bench smoke scale)")
+    ap.add_argument("--byzantine-smoke", action="store_true",
+                    help="toy-scale run with the headline assertions live; "
+                         "JSON artifact restored afterwards (CI)")
+    cli = ap.parse_args()
+    if cli.byzantine_smoke:
+        import unittest.mock as _mock
+        # keep the committed BENCH_byzantine.json untouched during smoke
+        with _mock.patch.object(common, "save_json", lambda *a, **k: None):
+            print(json.dumps(byzantine_smoke(), indent=1))
+    else:
+        print(json.dumps(main(full=cli.full, tiny=cli.tiny), indent=1))

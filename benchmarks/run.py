@@ -19,7 +19,8 @@ import time
 # silently running nothing
 SECTIONS = (
     "paper_tables", "convergence", "reg_sweep", "walk_sweep", "dmf_train",
-    "serving", "scheduler", "privacy", "robustness", "complexity",
+    "serving", "scheduler", "privacy", "robustness", "byzantine",
+    "complexity",
     "gossip_ablation", "perf_report", "kernels", "roofline",
 )
 
@@ -249,6 +250,27 @@ def main() -> None:
             f"resume_bit_identical={res['resume']['bit_identical_with_dp']};"
             f"churn_overhead={res['churn_overhead_vs_base']:.3f};"
             f"ckpt_overhead={res['checkpoint_overhead_vs_base']:.3f}"
+        )
+
+    if want("byzantine"):
+        from benchmarks import byzantine_bench
+        _section("byzantine (attack injection vs screening/robust agg)")
+        t0 = time.perf_counter()
+        res = byzantine_bench.main(full=args.full)  # saves BENCH_byzantine
+        us = (time.perf_counter() - t0) * 1e6
+        h = res["headline"]
+        ratio = h["undefended_collapse_ratio"]
+        print(
+            f"byzantine,{us:.0f},"
+            f"anchor_gap={res['anchor']['byz_off_gap']:.2e};"
+            f"undefended="
+            f"{'nonfinite' if h['undefended_nonfinite'] else f'{ratio:.1f}x'};"
+            f"collapsed={h['undefended_collapsed']};"
+            f"defended={h['defended_ratio']:.3f}x;"
+            f"within_1p5x={h['defended_within_1p5x']};"
+            f"screen_overhead={res['screening_overhead_vs_base']:.3f};"
+            f"trim_overhead={res['robust_agg_overhead_vs_base']:.3f};"
+            f"dp_pass_rate={res['dp_interaction']['honest_pass_rate']:.4f}"
         )
 
     if want("complexity"):

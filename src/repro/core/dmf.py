@@ -273,7 +273,9 @@ def _step_deltas_dp(U, P, Q, ui, vj, r, conf, cfg: DMFConfig, valid, noise):
 def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
                                   cfg: DMFConfig, valid=None, rid=None,
                                   dp_seed=None, noise=None, recv_gate=None,
-                                  prop_now=None):
+                                  prop_now=None, byz=None, amul=None,
+                                  ashill=None, dirs=None, vjm=None, bkt=None,
+                                  byz_cap=0):
     """One minibatch of Alg. 1 against the sparse neighbor table.
 
     Identical math to `_batch_step`; only the line 13-15 propagation differs:
@@ -294,6 +296,20 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
     own line-11 self slot: its neighbor deliveries come from the delay
     ring k epochs later (`_epoch_scan_churn`). All-ones gates multiply
     weights by 1.0 — bit-exact with the ungated path.
+
+    Byzantine path (robustness/byzantine.py; ``byz`` a `DefenseConfig`,
+    static): with ``byz is None`` (the default) NONE of the code below the
+    `byz is not None` branch is traced — the compiled program is the
+    pre-existing one. Otherwise the exchange is restructured: the sender's
+    own line-11 self update stays honest (an attacker poisons its *peers*,
+    not its own copy — and the global loss metric must stay comparable),
+    outgoing messages are corrupted per the attack arrays (``amul``/
+    ``ashill``/``dirs``/``vjm``), screened at the receiver boundary
+    (finite + norm-cap, content zeroed — 0·NaN is NaN), and combined per
+    (receiver, item) bucket by trimmed-mean/median instead of plain
+    summation when ``byz.aggregation != "sum"`` (``bkt`` the host-compiled
+    `MessageGroups` arrays). Returns the SENT (post-corruption) messages —
+    the delay ring must buffer what was actually released.
     """
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
@@ -306,7 +322,9 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
-    if cfg.mode != "ldmf":
+    if cfg.mode == "ldmf":
+        return U, P, Q, loss, gp
+    if byz is None:
         # lines 11 + 13-15 via the neighbor table: sender b's gradient gp[b]
         # lands on its S receivers at item vj[b], weighted by the walk weight.
         nb = nbr_idx[ui]                           # (B, S) receiver users
@@ -319,7 +337,54 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
             wb = wb * recv_gate[nb]                # offline receivers get 0
         upd = wb[:, :, None] * gp[:, None, :]      # (B, S, K)
         P = P.at[nb, vj[:, None]].add(-theta * upd)
-    return U, P, Q, loss, gp
+        return U, P, Q, loss, gp
+    from repro.robustness import byzantine as byz_lib
+    nb = nbr_idx[ui]                               # (B, S) receiver users
+    wb = nbr_wgt[ui]                               # (B, S) walk weights
+    selfm = (nb == ui[:, None]).astype(wb.dtype)
+    # honest line-11 self update (padded tables may carry the self slot
+    # more than once at weight 0 — summing the masked weights is exact)
+    w_self = jnp.sum(wb * selfm, axis=1)
+    if recv_gate is not None:
+        w_self = w_self * recv_gate[ui]
+    P = P.at[ui, vj].add(-theta * w_self[:, None] * gp)
+    # sender boundary: corrupt the outgoing copy only
+    gp_sent = gp
+    if amul is not None:
+        gp_sent = byz_lib.corrupt_messages(gp, amul, ashill, dirs[ui])
+    vj_out = vjm if vjm is not None else vj
+    wmsg = wb * (1.0 - selfm)
+    if prop_now is not None:
+        wmsg = wmsg * prop_now[:, None]
+    if recv_gate is not None:
+        wmsg = wmsg * recv_gate[nb]
+    gp_eff = gp_sent
+    if byz.screen:
+        ok = byz_lib.screen_ok(gp_sent, byz.norm_cap)   # (B,)
+        gp_eff = jnp.where(ok[:, None] > 0, gp_sent, 0.0)
+        wmsg = wmsg * ok[:, None]
+    # 0·NaN = NaN: a zero-weight slot (straggler / offline receiver / padded)
+    # whose sender bombed must deliver exactly 0, so the weight gates via
+    # `where`, not multiplication. With screening on, gp_eff is already
+    # zeroed wherever it was non-finite, so the plain multiply is safe —
+    # and ±0 contributions leave the scatter-add bitwise unchanged.
+    if byz.screen:
+        upd = wmsg[:, :, None] * gp_eff[:, None, :]
+    else:
+        upd = jnp.where((wmsg > 0)[:, :, None],
+                        wmsg[:, :, None] * gp_eff[:, None, :], 0.0)
+    if byz.aggregation == "sum":
+        P = P.at[nb, vj_out[:, None]].add(-theta * upd)
+    else:
+        b_id, b_pos, b_recv, b_item = bkt
+        K = gp.shape[-1]
+        vals = upd.reshape(-1, K)
+        validity = (wmsg > 0).astype(gp.dtype).reshape(-1)
+        comb = byz_lib.robust_combine(
+            vals, validity, b_id.reshape(-1), b_pos.reshape(-1),
+            b_recv.shape[-1], byz_cap, byz)
+        P = P.at[b_recv, b_item].add(-theta * comb)
+    return U, P, Q, loss, gp_sent
 
 
 def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
@@ -382,7 +447,9 @@ def _epoch_scan(
     return U, P, Q, losses
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_ring"),
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "use_ring", "byz", "use_attack",
+                                    "byz_cap"),
                    donate_argnums=(0, 1, 2))
 def _epoch_scan_churn(
     U: jnp.ndarray,
@@ -402,8 +469,19 @@ def _epoch_scan_churn(
     ring_vj: jnp.ndarray,      # (L·n,) buffered item ids
     ring_deliver: jnp.ndarray,  # (L·n,) float mask: due exactly this epoch
     dp_seed: jnp.ndarray,      # () int32 per-epoch mechanism seed (traced)
+    amul: jnp.ndarray,         # (n_batches, B) attack multipliers (dead if !use_attack)
+    ashill: jnp.ndarray,       # (n_batches, B) shill-replacement mask
+    vjm: jnp.ndarray,          # (n_batches, B) message item addressing
+    dirs: jnp.ndarray,         # (I, K) premultiplied shill content
+    b_id: jnp.ndarray,         # (n_batches, B, S) bucket ids (dead if sum agg)
+    b_pos: jnp.ndarray,        # (n_batches, B, S) in-bucket positions
+    b_recv: jnp.ndarray,       # (n_batches, NBK) bucket receiver rows
+    b_item: jnp.ndarray,       # (n_batches, NBK) bucket item ids
     cfg: DMFConfig,
     use_ring: bool,
+    byz=None,                  # robustness.byzantine.DefenseConfig | None
+    use_attack: bool = False,
+    byz_cap: int = 0,
 ):
     """`_epoch_scan` under a fault schedule: same one-dispatch epoch, with
     (1) start-of-epoch delivery of the delay ring's messages due now —
@@ -414,7 +492,13 @@ def _epoch_scan_churn(
 
     Under the trivial schedule (all masks 1, ``use_ring=False``) every
     fault op is a multiply-by-1.0 — bitwise identity — so the compiled
-    epoch produces exactly `_epoch_scan`'s outputs."""
+    epoch produces exactly `_epoch_scan`'s outputs.
+
+    Byzantine args (``byz``/``use_attack``/``byz_cap`` static): with
+    ``byz=None`` every attack/defense input is statically dead and the
+    trace is unchanged. A ring message due now is screened AT DELIVERY —
+    a malicious message buffered k epochs ago must not dodge the gate by
+    arriving late (the ring buffers SENT, i.e. corrupted, content)."""
     theta = cfg.lr
     if use_ring:
         gflat = ring_gp.reshape(-1, ring_gp.shape[-1])    # (L·n, K)
@@ -423,32 +507,67 @@ def _epoch_scan_churn(
         selfm = (nbd == ring_ui[:, None]).astype(wbd.dtype)
         wbd = (wbd * (1.0 - selfm) * recv_gate[nbd]
                * ring_deliver[:, None])
-        P = P.at[nbd, ring_vj[:, None]].add(
-            -theta * wbd[:, :, None] * gflat[:, None, :])
+        if byz is not None:
+            from repro.robustness import byzantine as byz_lib
+            if byz.screen:
+                okd = byz_lib.screen_ok(gflat, byz.norm_cap)
+                gflat = jnp.where(okd[:, None] > 0, gflat, 0.0)
+                wbd = wbd * okd[:, None]
+                # screened gflat is finite: plain multiply, ±0-neutral
+                upd = wbd[:, :, None] * gflat[:, None, :]
+            else:
+                upd = jnp.where((wbd > 0)[:, :, None],
+                                wbd[:, :, None] * gflat[:, None, :], 0.0)
+        else:
+            upd = wbd[:, :, None] * gflat[:, None, :]
+        P = P.at[nbd, ring_vj[:, None]].add(-theta * upd)
     nb, B = ui.shape
     from repro.privacy import mechanism
     noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
+    xs = [ui, vj, r, conf, valid, prop_now]
     if noise_on:
         from repro.kernels.dp_noise import gauss_counter
         K = U.shape[-1]
         rid = jnp.arange(nb * B, dtype=jnp.int32).reshape(-1, 1)
         Z = (mechanism.noise_std(cfg)
              * gauss_counter(dp_seed, rid, K)).reshape(nb, B, K)
-        xs = (ui, vj, r, conf, valid, prop_now, Z)
-    else:
-        xs = (ui, vj, r, conf, valid, prop_now)
+        xs.append(Z)
+    if use_attack:
+        xs += [amul, ashill]
+    robust = byz is not None and byz.aggregation != "sum"
+    if byz is not None:
+        xs.append(vjm)
+    if robust:
+        xs += [b_id, b_pos, b_recv, b_item]
 
     def body(carry, batch):
         U, P, Q = carry
         b_ui, b_vj, b_r, b_conf, b_val, b_prop = batch[:6]
+        i = 6
+        b_noise = None
+        if noise_on:
+            b_noise = batch[i]
+            i += 1
+        b_amul = b_ashill = b_vjm = bkt = None
+        if use_attack:
+            b_amul, b_ashill = batch[i], batch[i + 1]
+            i += 2
+        if byz is not None:
+            b_vjm = batch[i]
+            i += 1
+        if robust:
+            bkt = batch[i:i + 4]
         U, P, Q, loss, gp = _sparse_batch_update_messages(
             U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg,
-            valid=b_val, noise=batch[6] if noise_on else None,
+            valid=b_val, noise=b_noise,
             recv_gate=recv_gate, prop_now=b_prop,
+            byz=byz, amul=b_amul, ashill=b_ashill,
+            dirs=dirs if use_attack else None, vjm=b_vjm, bkt=bkt,
+            byz_cap=byz_cap,
         )
         return (U, P, Q), ((loss, gp) if use_ring else loss)
 
-    (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), xs)
+    (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), tuple(xs))
     if use_ring:
         losses, gps = ys
         return U, P, Q, losses, gps
@@ -465,6 +584,8 @@ def train_epoch_churn(
     plan,                       # robustness.faults.ChurnPlan
     ring,                       # robustness.faults.DelayRing | None
     accountant=None,
+    attack=None,                # robustness.byzantine.AttackPlan | None
+    byz=None,                   # robustness.byzantine.DefenseConfig | None
 ) -> tuple[DMFState, float]:
     """`train_epoch` under a compiled `ChurnPlan` for epoch ``t``: the SAME
     sampled stream (same rng consumption, per-epoch DP seed included), with
@@ -473,12 +594,18 @@ def train_epoch_churn(
     epoch's online mask, stragglers' neighbor scatters deferred through
     ``ring``, and the accountant observing only the REALIZED stream.
     Reported loss normalizes by realized (online) rows. ``cfg.n_shards>1``
-    dispatches to the SPMD counterpart (sharding/dmf.py)."""
+    dispatches to the SPMD counterpart (sharding/dmf.py).
+
+    ``attack`` (a compiled `AttackPlan`) corrupts the epoch's outgoing
+    messages at the sender boundary; ``byz`` (a `DefenseConfig`) turns on
+    receiver-side screening / robust aggregation. Both None (the default)
+    leaves the compiled epoch untouched. The delay ring buffers the SENT
+    (post-corruption) stream under shill re-addressing (``vjm``)."""
     if cfg.n_shards > 1:
         from repro.sharding import dmf as sharded_dmf
         return sharded_dmf.train_epoch_churn_sharded(
             state, prop, train, cfg, rng, t, plan, ring,
-            accountant=accountant)
+            accountant=accountant, attack=attack, byz=byz)
     nbr = _as_neighbor_table(prop)
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
@@ -503,6 +630,30 @@ def train_epoch_churn(
         r_vj = np.zeros(1, np.int32)
         r_del = np.zeros(1, np.float32)
         ring_gp = jnp.zeros((1, 1, state.U.shape[-1]), jnp.float32)
+    use_attack = attack is not None
+    if use_attack:
+        assert byz is not None   # fit() supplies DefenseConfig() (all-off)
+        amul, ashill, vjm = attack.epoch_row_attack(
+            t, ui2, vj2, sender_on=sender_on)
+        dirs = jnp.asarray(attack.dirs)
+    else:
+        amul = ashill = np.zeros(1, np.float32)
+        vjm = vj2
+        dirs = jnp.zeros((1, state.U.shape[-1]), jnp.float32)
+    robust = byz is not None and byz.aggregation != "sum"
+    if robust:
+        from repro.robustness import byzantine as byz_lib
+        groups = byz_lib.group_messages(
+            ui2, vjm, nbr.idx, nbr.wgt, cfg.n_items,
+            sender_gate=sender_on.astype(bool) & prop_now.astype(bool),
+            recv_on=on.astype(bool))
+        gb = (jnp.asarray(groups.bucket_id), jnp.asarray(groups.pos),
+              jnp.asarray(groups.recv), jnp.asarray(groups.item))
+        byz_cap = groups.cap
+    else:
+        z1 = np.zeros(1, np.int32)
+        gb = (z1, z1, z1, z1)
+        byz_cap = 0
     U, P, Q, losses, gps = _epoch_scan_churn(
         state.U, state.P, state.Q, nbr.idx, nbr.wgt,
         jnp.asarray(ui2), jnp.asarray(vj2),
@@ -511,10 +662,14 @@ def train_epoch_churn(
         jnp.asarray(prop_now.astype(np.float32)),
         jnp.asarray(on.astype(np.float32)),
         ring_gp, jnp.asarray(r_ui), jnp.asarray(r_vj), jnp.asarray(r_del),
-        jnp.asarray(dp_seed, jnp.int32), cfg, use_ring,
+        jnp.asarray(dp_seed, jnp.int32),
+        jnp.asarray(amul), jnp.asarray(ashill), jnp.asarray(vjm), dirs,
+        gb[0], gb[1], gb[2], gb[3],
+        cfg, use_ring, byz, use_attack, byz_cap,
     )
     if use_ring:
-        ring.write(t, gps.reshape(n, -1), ui2, vj2, due)
+        ring.write(t, gps.reshape(n, -1), ui2,
+                   vjm if byz is not None else vj2, due)
     total = float(np.asarray(losses, dtype=np.float64).sum())
     realized = int(sender_on.sum())
     return DMFState(U, P, Q), total / max(realized, 1)
@@ -663,6 +818,22 @@ class FitResult:
     train_losses: list
     test_losses: list
     privacy: dict | None = None   # accountant summary when cfg.dp (ε(δ) etc.)
+    diverged_at: int | None = None  # epoch whose update went non-finite
+                                    # (only set under on_nonfinite="halt")
+
+
+class DivergenceError(RuntimeError):
+    """Training produced a non-finite loss or factor update
+    (``fit(on_nonfinite="raise")``)."""
+
+
+def _epoch_finite(state: DMFState, loss: float) -> bool:
+    """Epoch health check: loss AND factors finite. Three all-reduces —
+    only paid under on_nonfinite={"raise","halt"}."""
+    if not np.isfinite(loss):
+        return False
+    return bool(jnp.isfinite(state.U).all() & jnp.isfinite(state.P).all()
+                & jnp.isfinite(state.Q).all())
 
 
 def fit(
@@ -679,6 +850,9 @@ def fit(
     checkpoint_dir=None,
     checkpoint_every: int = 0,
     resume_from=None,
+    attack=None,
+    defense=None,
+    on_nonfinite: str = "warn",
 ) -> FitResult:
     """Train `epochs` epochs of Alg. 1. `M` may be a dense (I, I) propagation
     matrix or a `graph.NeighborTable`; the sparse scan path is the default,
@@ -695,7 +869,23 @@ def fit(
     state (factors, rng stream, delay ring, accountant) every N completed
     epochs; ``resume_from`` (a step dir or checkpoint root) restores one
     and continues — bit-identical to the uninterrupted run, DP included
-    (the counter-keyed noise replays from the restored rng stream)."""
+    (the counter-keyed noise replays from the restored rng stream).
+
+    Byzantine robustness (robustness/byzantine.py): ``attack`` is an
+    `AttackConfig` (compiled here) or pre-compiled `AttackPlan` injecting
+    malicious outgoing messages; ``defense`` is a `DefenseConfig` turning
+    on receiver-side screening and/or robust aggregation. Either one
+    routes epochs through the churn machinery (a trivial all-online plan
+    when ``churn`` is None); both None leaves every compiled program
+    bit-exact with the defenseless stack.
+
+    ``on_nonfinite`` — divergence sentinel: "warn" (default) emits a
+    RuntimeWarning on a non-finite epoch loss and keeps going (the
+    pre-existing numerics); "raise" raises `DivergenceError`; "halt"
+    stops training, returns the LAST finite state and sets
+    `FitResult.diverged_at` to the offending epoch (that epoch's loss
+    stays in `train_losses` as the evidence)."""
+    assert on_nonfinite in ("warn", "raise", "halt"), on_nonfinite
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     state = init_state(cfg, rng)
     accountant = None
@@ -717,6 +907,30 @@ def fit(
         nb = (len(train) * (1 + cfg.neg_samples)) // cfg.batch_size
         ring = faults.DelayRing.create(plan.k_max, nb * cfg.batch_size,
                                        cfg.dim)
+    attack_plan = None
+    byz = None
+    if attack is not None:
+        from repro.robustness import byzantine
+        attack_plan = (attack.compile(cfg.n_users, epochs, cfg.dim)
+                       if isinstance(attack, byzantine.AttackConfig)
+                       else attack)
+        assert attack_plan.n_users == cfg.n_users, (
+            attack_plan.n_users, cfg.n_users)
+        assert attack_plan.n_epochs >= epochs, (attack_plan.n_epochs, epochs)
+        assert attack_plan.config.target_item < cfg.n_items
+        if attack_plan.is_trivial():
+            attack_plan = None
+    if defense is not None and defense.active:
+        byz = defense
+    if attack_plan is not None and byz is None:
+        from repro.robustness.byzantine import DefenseConfig
+        byz = DefenseConfig()    # undefended channel, byz path on
+    if (attack_plan is not None or byz is not None) and plan is None:
+        # the byzantine exchange runs on the churn epoch program — use the
+        # trivial all-online schedule (bit-exact gates), no delay ring
+        from repro.robustness import faults
+        assert not dense_reference, "byzantine runs the sparse/sharded paths"
+        plan = faults.no_churn(cfg.n_users, epochs)
     if dense_reference:
         assert not isinstance(M, graph_lib.NeighborTable), (
             "dense_reference needs the dense M"
@@ -739,16 +953,39 @@ def fit(
         state, rng, ring, start, tr_losses, te_losses = (
             recovery.load_training(resume_from, like_state=state,
                                    ring=ring, accountant=accountant))
+    diverged_at = None
+    warned = False
     for t in range(start, epochs):
+        if on_nonfinite == "halt":
+            # donated buffers: the epoch consumes `state`, so the fallback
+            # copy must be taken up front (only paid in halt mode)
+            prev = DMFState(jnp.copy(state.U), jnp.copy(state.P),
+                            jnp.copy(state.Q))
         if plan is not None:
             state, l = train_epoch_churn(state, prop, train, cfg, rng, t,
-                                         plan, ring, accountant=accountant)
+                                         plan, ring, accountant=accountant,
+                                         attack=attack_plan, byz=byz)
         elif epoch_fn is train_epoch_dense:
             state, l = epoch_fn(state, prop, train, cfg, rng)
         else:
             state, l = epoch_fn(state, prop, train, cfg, rng,
                                 accountant=accountant)
         tr_losses.append(l)
+        if on_nonfinite == "warn":
+            if not warned and not np.isfinite(l):
+                import warnings
+                warnings.warn(
+                    f"epoch {t}: non-finite training loss {l!r} — training "
+                    "has diverged (see fit(on_nonfinite=...))",
+                    RuntimeWarning, stacklevel=2)
+                warned = True
+        elif not _epoch_finite(state, l):
+            if on_nonfinite == "raise":
+                raise DivergenceError(
+                    f"epoch {t}: non-finite loss or factors (loss={l!r})")
+            state = prev             # halt: last finite state wins
+            diverged_at = t
+            break
         if test is not None:
             te_losses.append(test_loss(state, test))
         if callback is not None:
@@ -768,7 +1005,8 @@ def fit(
         from repro.sharding import dmf as sharded_dmf
         state = sharded_dmf.unpad_state(state, cfg.n_users)
     return FitResult(state, tr_losses, te_losses,
-                     privacy=accountant.summary() if accountant else None)
+                     privacy=accountant.summary() if accountant else None,
+                     diverged_at=diverged_at)
 
 
 def evaluate(

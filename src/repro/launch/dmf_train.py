@@ -94,6 +94,44 @@ def main():
                          "(stateless before their join epoch)")
     ap.add_argument("--churn-seed", type=int, default=0,
                     help="churn schedule seed (independent of training rng)")
+    ap.add_argument("--byz-family", default="none",
+                    help="inject byzantine senders (robustness/byzantine.py): "
+                         "none|nan|inf|norm_inflate|sign_flip|shill")
+    ap.add_argument("--byz-frac", type=float, default=0.0,
+                    help="fraction of learners compromised (seeded draw)")
+    ap.add_argument("--byz-scale", type=float, default=10.0,
+                    help="attack magnitude: norm-inflation factor λ, or the "
+                         "shill direction's norm")
+    ap.add_argument("--byz-target-item", type=int, default=0,
+                    help="POI the shill family pushes every message toward")
+    ap.add_argument("--byz-no-collude", action="store_true",
+                    help="independent per-attacker shill directions instead "
+                         "of one shared (colluding) direction")
+    ap.add_argument("--byz-start-epoch", type=int, default=0,
+                    help="sleeper agents: attack only from this epoch on")
+    ap.add_argument("--byz-seed", type=int, default=0,
+                    help="attack plan seed (independent of training rng)")
+    ap.add_argument("--screen", action="store_true",
+                    help="receiver-side message screening: drop non-finite "
+                         "incoming messages, and over-norm ones if a cap "
+                         "is set (--norm-cap)")
+    ap.add_argument("--norm-cap", type=float, default=float("inf"),
+                    help="screening L2 cap τ; 0 = auto-calibrate from the DP "
+                         "mechanism so honest noised messages pass "
+                         "(privacy.screening_threshold; needs finite "
+                         "--dp-clip)")
+    ap.add_argument("--aggregation", default="sum",
+                    choices=["sum", "trim", "median"],
+                    help="per-(receiver,item) combine of incoming messages: "
+                         "plain summation, or count-scaled coordinate-wise "
+                         "trimmed mean / median (byzantine-robust)")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="fraction trimmed from EACH tail (aggregation=trim)")
+    ap.add_argument("--on-nonfinite", default="warn",
+                    choices=["warn", "raise", "halt"],
+                    help="divergence sentinel: warn and continue, raise "
+                         "DivergenceError, or halt returning the last "
+                         "finite state")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot the full loop state (factors, rng, delay "
                          "ring, eps ledger) under this directory")
@@ -171,6 +209,26 @@ def main():
               f"delay<= {args.churn_delay} late_frac={args.churn_late_frac} "
               f"participation={plan.participation_rate:.3f}")
 
+    attack = defense = None
+    if args.byz_family != "none" and args.byz_frac > 0:
+        from repro.robustness.byzantine import AttackConfig
+        attack = AttackConfig(
+            family=args.byz_family, frac=args.byz_frac, scale=args.byz_scale,
+            target_item=args.byz_target_item, collude=not args.byz_no_collude,
+            start_epoch=args.byz_start_epoch, seed=args.byz_seed)
+        print(f"byzantine family={args.byz_family} frac={args.byz_frac} "
+              f"scale={args.byz_scale} seed={args.byz_seed}")
+    if args.screen or args.aggregation != "sum":
+        from repro.privacy import screening_threshold
+        from repro.robustness.byzantine import DefenseConfig
+        norm_cap = args.norm_cap
+        if args.screen and norm_cap == 0.0:
+            norm_cap = screening_threshold(cfg, cfg.dim)
+            print(f"screening norm cap auto-calibrated: tau={norm_cap:.4f}")
+        defense = DefenseConfig(
+            screen=args.screen, norm_cap=norm_cap,
+            aggregation=args.aggregation, trim_frac=args.trim_frac)
+
     comm = graph.communication_bytes(
         W, D=args.walk_length, K=args.dim, n_ratings=len(ds.train))
     fanout = ("dense" if args.dense_reference
@@ -188,7 +246,11 @@ def main():
                   dp_delta=args.dp_delta, churn=churn,
                   checkpoint_dir=args.checkpoint_dir,
                   checkpoint_every=args.checkpoint_every,
-                  resume_from=args.resume_from)
+                  resume_from=args.resume_from,
+                  attack=attack, defense=defense,
+                  on_nonfinite=args.on_nonfinite)
+    if res.diverged_at is not None:
+        print(f"training halted: diverged at epoch {res.diverged_at}")
     ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
                       n_shards=args.n_shards)
     if res.privacy is not None:

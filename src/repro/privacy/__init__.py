@@ -32,4 +32,5 @@ from repro.privacy.mechanism import (  # noqa: F401
     dp_enabled,
     epoch_noise_seed,
     noise_std,
+    screening_threshold,
 )

@@ -194,3 +194,41 @@ def run_audit(cfg: dmf.DMFConfig, train: np.ndarray, nbr, n_users: int,
         log, train, n_users, n_items,
         rng=np.random.default_rng(seed + 1), n_pairs=n_pairs))
     return out
+
+
+def screening_report(log: MessageLog, norm_cap: float,
+                     reject_prob: float | None = None) -> dict:
+    """Privacy-side view of byzantine receiver screening (robustness/
+    byzantine.py): replay the accept gate over an observed HONEST message
+    stream and report what it costs and what it leaks.
+
+    The accept bit is post-processing of the released message g̃ — a
+    deterministic function of (g̃, τ) computable by any observer of the
+    channel, so it consumes no additional ε (the DP guarantee of the
+    release covers every function of it). What screening *does* add is an
+    explicit utility price — honest messages falsely rejected — and a
+    1-bit side channel correlated with the pre-noise norm: the report
+    quantifies both (``pass_rate`` against the calibrated bound, and the
+    accept-bit/rating agreement, which stays ≈ chance when τ is set by
+    `mechanism.screening_threshold` because nearly everything passes).
+    """
+    norms = np.linalg.norm(log.gp, axis=1)
+    finite = np.isfinite(log.gp).all(axis=1)
+    ok = finite & (norms <= norm_cap)
+    pos = log.rating > 0.5
+    # the accept bit as a rating classifier: its AUC is the leak magnitude
+    auc = _auc(ok[pos].astype(np.float64), ok[~pos].astype(np.float64))
+    out = {
+        "norm_cap": float(norm_cap) if np.isfinite(norm_cap) else None,
+        "n_messages": int(len(norms)),
+        "pass_rate": float(ok.mean()) if len(norms) else 1.0,
+        "reject_rate": float(1.0 - ok.mean()) if len(norms) else 0.0,
+        "norm_p50": float(np.quantile(norms, 0.5)) if len(norms) else 0.0,
+        "norm_p99": float(np.quantile(norms, 0.99)) if len(norms) else 0.0,
+        "norm_max": float(norms.max()) if len(norms) else 0.0,
+        "accept_bit_rating_auc": auc,
+        "accept_bit_rating_advantage": _advantage(auc),
+    }
+    if reject_prob is not None:
+        out["calibrated_reject_prob"] = float(reject_prob)
+    return out

@@ -53,6 +53,37 @@ def noise_std(cfg) -> float:
     return cfg.dp_sigma * cfg.dp_clip
 
 
+def screening_threshold(cfg, dim: int, reject_prob: float = 1e-6) -> float:
+    """Norm cap τ for receiver-side byzantine screening
+    (robustness/byzantine.py), calibrated so HONEST DP releases pass.
+
+    An honest message is g̃ = clip_C(g) + N(0, (σC)² I_K), so
+    ‖g̃‖ ≤ C + ‖z‖ with ‖z‖² = (σC)²·χ²_K. The Laurent–Massart tail bound
+    gives  Pr[χ²_K ≥ K + 2√(K t) + 2t] ≤ e^{-t};  with t = ln(1/p):
+
+        τ = C + σC · √(K + 2√(K·t) + 2t)
+
+    i.e. an honest learner's message is rejected with probability ≤ p
+    (``reject_prob``) per message — the false-reject rate the defense
+    costs, and the slack an attacker gets for free: anything it sends
+    under τ is indistinguishable-by-norm from honest traffic, which is
+    why norm-preserving attacks (sign flip) need robust *aggregation*,
+    not screening. Degenerate regimes: σ=0 → τ=C exactly (clipping is
+    deterministic); C=∞ (no DP) → τ=∞, screening reduces to the finite
+    check. The audit-side view of what the accept bit leaks is
+    `privacy.audit.screening_report`.
+    """
+    assert 0.0 < reject_prob < 1.0, reject_prob
+    if not math.isfinite(cfg.dp_clip):
+        return float("inf")
+    if cfg.dp_sigma <= 0.0:
+        return float(cfg.dp_clip)
+    t = math.log(1.0 / reject_prob)
+    k = float(dim)
+    chi2 = k + 2.0 * math.sqrt(k * t) + 2.0 * t
+    return float(cfg.dp_clip + noise_std(cfg) * math.sqrt(chi2))
+
+
 def epoch_noise_seed(rng: np.random.Generator, cfg) -> int:
     """Per-epoch mechanism seed: a fresh rng draw folded with ``dp_seed``.
 

@@ -11,11 +11,24 @@ mid-training. This package makes that realism first-class:
 * `recovery` — crash-consistent training checkpoints: snapshot + restore
   of the FULL loop state (factors, rng stream, delay ring, DP accountant)
   so `dmf.fit(resume_from=...)` is bit-identical to the uninterrupted run.
+* `byzantine` — adversarial realism on top of the crash realism: seeded
+  `AttackConfig`/`AttackPlan` message-corruption schedules (NaN bombs,
+  norm inflation, sign flips, targeted shilling, colluding groups) and
+  the receiver-side `DefenseConfig` (finite+norm screening, trimmed-mean
+  / median robust aggregation) applied at every delivery site.
 """
 from repro.robustness.faults import (  # noqa: F401
     ChurnConfig,
     ChurnPlan,
     DelayRing,
     no_churn,
+)
+from repro.robustness.byzantine import (  # noqa: F401
+    AGGREGATIONS,
+    FAMILIES,
+    AttackConfig,
+    AttackPlan,
+    DefenseConfig,
+    no_attack,
 )
 from repro.robustness import recovery  # noqa: F401

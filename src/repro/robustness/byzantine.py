@@ -1,0 +1,439 @@
+"""Byzantine-robust gradient exchange: attack injection + receiver defenses.
+
+PR 6 covered *crash* faults (churn, staleness, resume); this module covers
+the *adversarial* half: in DMF every learner's P matrix is updated by
+scatter-adding whatever gradient messages arrive, so a single compromised
+phone can poison every D-hop neighbor. Three pieces:
+
+* **Attack injection** — `AttackConfig.compile(...) -> AttackPlan`,
+  mirroring `ChurnConfig -> ChurnPlan`: a seeded, deterministic plan of
+  which learners are malicious from which epoch, realized per epoch as
+  fixed-shape per-row corruption arrays applied to *outgoing* messages at
+  the sender boundary (after the DP mechanism — a malicious sender is not
+  assumed to run it honestly; the corruption REPLACES its release).
+  Families:
+    - ``nan`` / ``inf``      — non-finite bombs (one poisoned scatter
+                               NaNs a receiver row forever);
+    - ``norm_inflate``       — honest direction scaled by ``scale`` (λ);
+    - ``sign_flip``          — negated gradient (norm-preserving, so it
+                               passes any norm gate — the case for robust
+                               aggregation);
+    - ``shill``              — targeted item promotion: every message the
+                               attacker sends is re-addressed to
+                               ``target_item`` with content −scale·d̂, so
+                               receivers' P[:, target] is pushed toward
+                               the chosen direction d̂. ``collude=True``
+                               gives all attackers ONE shared direction
+                               (a colluding group), else each draws its
+                               own.
+
+* **Receiver-side screening** — `screen_ok`: a finite-check + L2 norm-cap
+  gate evaluated on every incoming message BEFORE the P scatter (and on
+  every stale `DelayRing` message at delivery). Rejected messages are
+  zeroed content-AND-weight (0·NaN would still poison, so the content is
+  `where`-ed out, not just the weight). The cap τ is calibrated from the
+  DP mechanism (`privacy.mechanism.screening_threshold`): honest clipped+
+  noised messages pass with probability ≥ 1−p by a chi-square tail bound.
+  The decision depends only on (message content, τ), both shard-count
+  invariant, so screening is too.
+
+* **Robust aggregation** — when a receiver gets multiple messages for the
+  same (item, step), `robust_combine` replaces plain summation with a
+  coordinate-wise trimmed-mean or median over a fixed-shape per-(receiver,
+  item) bucket buffer. Bucket membership is precompiled host-side per
+  epoch (`group_messages` / `group_messages_sharded` — the sampled stream
+  and the graph tables are host-known), padded to a stable (NBK, cap)
+  shape, so the combine is one sort + masked reduction inside the same
+  per-epoch dispatch. Values are sorted coordinate-wise before reduction,
+  which makes the float summation order canonical — the combined update is
+  invariant to the shard count that delivered the messages. The combined
+  update is scaled by the valid-message count (``c · trimmed_mean``), so
+  with no attackers it matches plain summation up to reassociation.
+
+No-attack + defenses-off compiles the EXACT pre-existing epoch program:
+`dmf.fit` only routes through the byzantine code when an attack plan or an
+*active* `DefenseConfig` is present, so the default path stays bit-exact
+with PRs 1-8 at every shard count (tests/test_byzantine.py pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+FAMILIES = ("none", "nan", "inf", "norm_inflate", "sign_flip", "shill")
+AGGREGATIONS = ("sum", "trim", "median")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Adversary schedule parameters. `compile(n_users, epochs, dim)`
+    realizes them into an `AttackPlan`; the draw order (malicious set →
+    shill directions) is fixed, so a seed fully determines the plan."""
+
+    family: str = "none"        # one of FAMILIES
+    frac: float = 0.0           # fraction of learners malicious
+    scale: float = 10.0         # λ for norm_inflate; push magnitude for shill
+    target_item: int = 0        # shill: the promoted POI
+    collude: bool = True        # shill: one shared direction vs per-attacker
+    start_epoch: int = 0        # attackers behave honestly before this epoch
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert 0.0 <= self.frac <= 1.0, self.frac
+        assert self.scale > 0.0, self.scale
+        assert self.target_item >= 0 and self.start_epoch >= 0
+
+    def compile(self, n_users: int, epochs: int, dim: int) -> "AttackPlan":
+        rng = np.random.default_rng(self.seed)
+        n_mal = int(round(self.frac * n_users))
+        malicious = np.zeros(n_users, bool)
+        if n_mal > 0 and self.family != "none":
+            malicious[rng.choice(n_users, size=n_mal, replace=False)] = True
+        active = np.zeros((epochs, n_users), bool)
+        if self.start_epoch < epochs:
+            active[self.start_epoch:] = malicious[None, :]
+        dirs = np.zeros((n_users, dim), np.float32)
+        if self.family == "shill" and malicious.any():
+            k = 1 if self.collude else int(malicious.sum())
+            d = rng.normal(size=(k, dim))
+            d /= np.linalg.norm(d, axis=1, keepdims=True)
+            # premultiplied message content: the scatter applies -θ·w·msg,
+            # so msg = -scale·d̂ pushes P[:, target] toward +d̂
+            dirs[malicious] = (-self.scale * d).astype(np.float32)
+        return AttackPlan(active=active, malicious=malicious, dirs=dirs,
+                          config=self)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackPlan:
+    """A compiled adversary schedule: pure data, safe to hash/ship/replay."""
+
+    active: np.ndarray      # (epochs, I) bool — attacker live this epoch
+    malicious: np.ndarray   # (I,) bool — the compromised set
+    dirs: np.ndarray        # (I, K) float32 — premultiplied shill content
+    config: AttackConfig
+
+    @property
+    def n_epochs(self) -> int:
+        return int(self.active.shape[0])
+
+    @property
+    def n_users(self) -> int:
+        return int(self.active.shape[1])
+
+    @property
+    def n_malicious(self) -> int:
+        return int(self.malicious.sum())
+
+    def is_trivial(self) -> bool:
+        return not bool(self.active.any())
+
+    def epoch_row_attack(self, t: int, ui: np.ndarray, vj: np.ndarray,
+                         sender_on: np.ndarray | None = None):
+        """Fixed-shape per-row corruption arrays for epoch ``t`` of a
+        sampled sender stream ``ui`` (any shape; ``vj`` matches):
+
+        * ``amul``  — multiplicative corruption of the outgoing message
+          (1 = honest; λ / −1 / NaN / Inf per family). Rows whose sender
+          is offline (``sender_on=0``) are forced back to 1: an absent
+          learner releases nothing, and 0·NaN would still poison.
+        * ``ashill`` — 1 where the row's message is REPLACED by the
+          sender's premultiplied shill direction (``AttackPlan.dirs``);
+        * ``vj_msg`` — the message's item addressing: ``target_item`` for
+          shill rows, the honest ``vj`` otherwise.
+        """
+        assert 0 <= t < self.n_epochs, (t, self.n_epochs)
+        ui = np.asarray(ui)
+        safe = np.minimum(ui, self.n_users - 1)    # padded routed slots
+        mal = self.active[t][safe] & (ui < self.n_users)
+        if sender_on is not None:
+            mal = mal & np.asarray(sender_on).astype(bool)
+        fam = self.config.family
+        amul = np.ones(ui.shape, np.float32)
+        if fam == "norm_inflate":
+            amul[mal] = np.float32(self.config.scale)
+        elif fam == "sign_flip":
+            amul[mal] = -1.0
+        elif fam == "nan":
+            amul[mal] = np.nan
+        elif fam == "inf":
+            amul[mal] = np.inf
+        shill = mal & (fam == "shill")
+        vjm = np.where(shill, self.config.target_item, vj).astype(np.int32)
+        return amul, shill.astype(np.float32), vjm
+
+
+def no_attack(n_users: int, epochs: int, dim: int) -> AttackPlan:
+    """The trivial plan: nobody malicious — `fit` normalizes it to None."""
+    return AttackConfig().compile(n_users, epochs, dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Receiver-side defense switches. Hashable (a static jit argument):
+    the compiled epoch specializes on it. ``active == False`` (the default)
+    means the epoch never enters the byzantine code path at all."""
+
+    screen: bool = False            # finite-check + norm-cap gate
+    norm_cap: float = float("inf")  # τ; inf ⇒ finite-check only
+    aggregation: str = "sum"        # sum | trim | median
+    trim_frac: float = 0.2          # per-side trim fraction (trim mode)
+
+    def __post_init__(self):
+        assert self.aggregation in AGGREGATIONS, self.aggregation
+        assert 0.0 <= self.trim_frac < 0.5, self.trim_frac
+        assert self.norm_cap > 0.0, self.norm_cap
+
+    @property
+    def active(self) -> bool:
+        return self.screen or self.aggregation != "sum"
+
+
+# ---------------------------------------------------------------------------
+# Device-side pieces (pure jnp; imported lazily by core/dmf and sharding/dmf)
+# ---------------------------------------------------------------------------
+def corrupt_messages(gp: jnp.ndarray, amul: jnp.ndarray, ashill: jnp.ndarray,
+                     shill_msg: jnp.ndarray) -> jnp.ndarray:
+    """Apply the compiled per-row corruption at the sender boundary:
+    ``gp (B,K)`` honest released messages, ``amul/ashill (B,)``,
+    ``shill_msg (B,K)`` the rows' premultiplied shill content."""
+    out = gp * amul[:, None]
+    return jnp.where(ashill[:, None] > 0, shill_msg, out)
+
+
+def screen_ok(gp: jnp.ndarray, norm_cap: float) -> jnp.ndarray:
+    """Per-message accept mask (float 0/1): every coordinate finite AND
+    ‖m‖₂ ≤ τ. NaN compares false, so bombs fail both gates. ``gp`` is
+    (..., K); the mask drops the last axis."""
+    ok = jnp.all(jnp.isfinite(gp), axis=-1)
+    if math.isfinite(norm_cap):
+        nrm2 = jnp.sum(gp * gp, axis=-1)
+        ok = ok & (nrm2 <= jnp.float32(norm_cap) ** 2)
+    return ok.astype(gp.dtype)
+
+
+def _sort_cols(vs: jnp.ndarray) -> jnp.ndarray:
+    """Ascending sort along axis 1 via an odd-even transposition network.
+
+    ``cap`` is a small static width (multiple of 4, typically 4-8), so the
+    network unrolls to cap rounds of elementwise min/max that XLA fuses
+    into the surrounding scan body — an order of magnitude cheaper inside
+    the epoch loop than `jnp.sort`'s general comparator sort, which
+    dominated the robust-aggregation epoch on the CPU backend.
+    """
+    cap = vs.shape[1]
+    cols = [vs[:, i] for i in range(cap)]
+    for r in range(cap):
+        for i in range(r % 2, cap - 1, 2):
+            a, b = cols[i], cols[i + 1]
+            cols[i] = jnp.minimum(a, b)
+            cols[i + 1] = jnp.maximum(a, b)
+    return jnp.stack(cols, axis=1)
+
+
+def robust_combine(vals: jnp.ndarray, validity: jnp.ndarray,
+                   bucket_id: jnp.ndarray, pos: jnp.ndarray,
+                   n_buckets: int, cap: int,
+                   defense: DefenseConfig) -> jnp.ndarray:
+    """Coordinate-wise robust combine over fixed-shape message buckets.
+
+    ``vals (M, K)`` weighted screened messages, ``validity (M,)`` 0/1,
+    ``bucket_id (M,)`` in [0, n_buckets] (n_buckets = overflow row for
+    host-invalid slots, which carry value 0), ``pos (M,) < cap`` unique
+    within a bucket by construction (`group_messages`). Returns the
+    (n_buckets, K) combined per-bucket updates:
+
+        c · trimmed_mean(values)   (aggregation="trim")
+        c · median(values)         (aggregation="median")
+
+    scaled by the valid count c so magnitudes stay sum-comparable — with
+    no outliers and no trimming pressure the combine equals plain
+    summation up to float reassociation. Invalid slots sort to +inf and
+    are excluded by the count-derived keep window; empty buckets combine
+    to exactly 0. Sorting each coordinate makes the reduction order
+    canonical, so the result is invariant to which shard delivered which
+    message.
+    """
+    K = vals.shape[-1]
+    # one fused scatter for values + validity (scatters serialize on the
+    # CPU backend — two halves the epoch's robust-path scatter count)
+    aug = jnp.concatenate([vals, validity[:, None]], axis=-1)
+    buf_aug = jnp.zeros((n_buckets + 1, cap, K + 1), vals.dtype)
+    buf_aug = buf_aug.at[bucket_id, pos].add(aug)
+    buf, m = buf_aug[..., :K], buf_aug[..., K]
+    c = jnp.sum(m, axis=1)                                   # (NB+1,)
+    ci = c.astype(jnp.int32)[:, None]
+    vs = jnp.where(m[..., None] > 0, buf, jnp.inf)
+    vs = _sort_cols(vs)                                      # (NB+1, cap, K)
+    if defense.aggregation == "trim":
+        k = jnp.floor(defense.trim_frac * c).astype(jnp.int32)[:, None]
+        p = jnp.arange(cap)[None, :]
+        keep = (p >= k) & (p < ci - k)
+        s = jnp.sum(jnp.where(keep[..., None], vs, 0.0), axis=1)
+        denom = jnp.maximum(ci - 2 * k, 1).astype(vals.dtype)
+        comb = c[:, None] * s / denom
+    else:  # median
+        lo = jnp.clip((ci[:, 0] - 1) // 2, 0, cap - 1)[:, None, None]
+        hi = jnp.clip(ci[:, 0] // 2, 0, cap - 1)[:, None, None]
+        vlo = jnp.take_along_axis(vs, jnp.broadcast_to(
+            lo, (vs.shape[0], 1, K)), axis=1)[:, 0]
+        vhi = jnp.take_along_axis(vs, jnp.broadcast_to(
+            hi, (vs.shape[0], 1, K)), axis=1)[:, 0]
+        comb = c[:, None] * 0.5 * (vlo + vhi)
+    comb = jnp.where(c[:, None] > 0, comb, 0.0)
+    return comb[:n_buckets]
+
+
+# ---------------------------------------------------------------------------
+# Host-side bucket assignment (the sampled stream and graph tables are
+# host-known, so group membership compiles ahead of the dispatch — the
+# device only scatters into the precomputed fixed-shape buffer).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MessageGroups:
+    """Per-epoch bucket assignment: ``bucket_id``/``pos`` address each
+    candidate message slot into a (groups, NBK(+1 overflow), cap) buffer;
+    ``recv``/``item`` are each bucket's scatter target."""
+
+    bucket_id: np.ndarray   # (..., slots) int32 in [0, NBK]
+    pos: np.ndarray         # (..., slots) int32 < cap
+    recv: np.ndarray        # (..., NBK) int32 receiver rows
+    item: np.ndarray        # (..., NBK) int32 item ids
+    cap: int                # max messages per bucket (padded)
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.recv.shape[-1])
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-max(x, 1) // m) * m
+
+
+def _cumcount(inv: np.ndarray, n_groups: int):
+    """Stable position of each element within its group + group sizes."""
+    order = np.argsort(inv, kind="stable")
+    counts = np.bincount(inv, minlength=n_groups)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.empty(inv.size, np.int64)
+    pos[order] = np.arange(inv.size) - starts[inv[order]]
+    return pos, counts
+
+
+def _assign_buckets(grp, recv, item, valid, n_groups, n_rows, n_items,
+                    cap_multiple=4, bucket_multiple=64):
+    """Shared bucket assignment: flat slot arrays keyed by
+    (group, receiver, item). Returns (bid, pos, brecv, bitem, cap) with
+    NBK/cap rounded up to stable multiples (rarely recompiles)."""
+    grp = np.asarray(grp).reshape(-1)
+    recv = np.asarray(recv).reshape(-1)
+    item = np.asarray(item).reshape(-1)
+    valid = np.asarray(valid).reshape(-1).astype(bool)
+    key = (grp.astype(np.int64) * n_rows + recv) * n_items + item
+    flat = np.where(valid, key, -1)
+    uniq, inv = np.unique(flat, return_inverse=True)
+    pos, counts = _cumcount(inv, len(uniq))
+    vmask = uniq >= 0
+    ubatch = np.where(vmask, uniq // (np.int64(n_rows) * n_items), -1)
+    # uniq is sorted and keys are group-major, so groups are contiguous
+    start = np.searchsorted(ubatch, np.arange(n_groups))
+    bucket_of_uniq = np.arange(len(uniq)) - start[np.maximum(ubatch, 0)]
+    if vmask.any():
+        nbk = int(np.bincount(ubatch[vmask], minlength=n_groups).max())
+        cap = int(counts[vmask].max())
+    else:
+        nbk, cap = 1, 1
+    NBK = _round_up(nbk, bucket_multiple)
+    cap = _round_up(cap, cap_multiple)
+    bid = np.where(valid, bucket_of_uniq[inv], NBK).astype(np.int32)
+    p = np.where(valid, pos, 0).astype(np.int32)
+    brecv = np.zeros((n_groups, NBK), np.int32)
+    bitem = np.zeros((n_groups, NBK), np.int32)
+    brecv[ubatch[vmask], bucket_of_uniq[vmask]] = (
+        (uniq[vmask] // n_items) % n_rows).astype(np.int32)
+    bitem[ubatch[vmask], bucket_of_uniq[vmask]] = (
+        uniq[vmask] % n_items).astype(np.int32)
+    return bid, p, brecv, bitem, cap
+
+
+def group_messages(ui, vj_msg, nbr_idx, nbr_wgt, n_items,
+                   sender_gate=None, recv_on=None) -> MessageGroups:
+    """Single-device bucket assignment for one epoch's (nb, B) stream.
+
+    A candidate slot is each (row, neighbor-table slot) pair; slots that
+    cannot carry a message THIS epoch (padded weight-0 slots, the sender's
+    own line-11 self slot, gated senders — offline or straggling — and
+    offline receivers) go to the overflow bucket with value 0. Device-side
+    screening later zeroes a slot's validity without moving it.
+    """
+    nbr_idx = np.asarray(nbr_idx)
+    nbr_wgt = np.asarray(nbr_wgt)
+    ui = np.asarray(ui)
+    nb, B = ui.shape
+    I, S = nbr_idx.shape
+    recv = nbr_idx[ui]                           # (nb, B, S)
+    w = nbr_wgt[ui]
+    valid = (w > 0) & (recv != ui[..., None])
+    if sender_gate is not None:
+        valid &= np.asarray(sender_gate).astype(bool)[..., None]
+    if recv_on is not None:
+        valid &= np.asarray(recv_on).astype(bool)[recv]
+    grp = np.broadcast_to(np.arange(nb)[:, None, None], recv.shape)
+    item = np.broadcast_to(np.asarray(vj_msg)[..., None], recv.shape)
+    bid, pos, brecv, bitem, cap = _assign_buckets(
+        grp, recv, item, valid, nb, I, int(n_items))
+    return MessageGroups(
+        bucket_id=bid.reshape(nb, B, S), pos=pos.reshape(nb, B, S),
+        recv=brecv, item=bitem, cap=cap)
+
+
+def group_messages_sharded(ui_local, vj_msg, valid_rows, part_idx, part_wgt,
+                           rows: int, n_shards: int, n_items: int,
+                           prop_now=None, online=None) -> MessageGroups:
+    """Bucket assignment per (batch, destination shard) for the sharded
+    epoch: enumerates the post-`all_to_all` incoming slots of every shard
+    in their exact received order — (source shard, routed row, table slot)
+    — so the device indexes line up with the flattened (D, Bs, S) tensors.
+
+    ``ui_local (nb, D, Bs)`` routed local sender rows, ``vj_msg`` routed
+    message items, ``valid_rows`` routed row validity (padding AND offline
+    senders), ``part_idx/part_wgt (I_pad, D, S)`` the destination-
+    partitioned table, ``online (I_pad,)`` the receivers' global mask.
+    Receiver ids in the result are SHARD-LOCAL rows (what the local
+    scatter needs).
+    """
+    pidx = np.asarray(part_idx)
+    pwgt = np.asarray(part_wgt)
+    ui_local = np.asarray(ui_local)
+    nb, D, Bs = ui_local.shape
+    S = pidx.shape[2]
+    g = np.arange(D)[None, :, None] * rows + ui_local       # global senders
+    w = pwgt[g]                                             # (nb,Dsrc,Bs,Ddst,S)
+    ri = pidx[g]
+    dest = np.arange(D)[None, None, None, :, None]
+    grecv = dest * rows + ri
+    valid = (w > 0) & (grecv != g[..., None, None])
+    valid &= np.asarray(valid_rows).astype(bool)[..., None, None]
+    if prop_now is not None:
+        valid &= np.asarray(prop_now).astype(bool)[..., None, None]
+    if online is not None:
+        valid &= np.asarray(online).astype(bool)[grecv]
+    item = np.broadcast_to(
+        np.asarray(vj_msg)[..., None, None], ri.shape)
+    # (nb, Dsrc, Bs, Ddst, S) -> (nb, Ddst, Dsrc, Bs, S): received order
+    ri_t = np.moveaxis(ri, 3, 1)
+    val_t = np.moveaxis(valid, 3, 1)
+    item_t = np.moveaxis(item, 3, 1)
+    grp = (np.arange(nb)[:, None] * D + np.arange(D)[None, :])
+    grp = np.broadcast_to(grp[:, :, None, None, None], ri_t.shape)
+    bid, pos, brecv, bitem, cap = _assign_buckets(
+        grp, ri_t, item_t, val_t, nb * D, rows, int(n_items))
+    M = D * Bs * S
+    return MessageGroups(
+        bucket_id=bid.reshape(nb, D, M), pos=pos.reshape(nb, D, M),
+        recv=brecv.reshape(nb, D, -1), item=bitem.reshape(nb, D, -1),
+        cap=cap)

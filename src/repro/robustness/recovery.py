@@ -72,15 +72,33 @@ def save_training(root, step: int, state, rng: np.random.Generator,
 
 
 def resolve_step_dir(path) -> pathlib.Path:
-    """Accept either a ``step_<t>`` directory or a checkpoint root (picks
-    the latest step under it)."""
+    """Accept either a ``step_<t>`` directory or a checkpoint root.
+
+    Given a root, picks the latest step whose leaves VERIFY against their
+    manifest sha256s (checkpoint/ckpt.py): a torn or bit-rotted latest
+    snapshot is skipped with a warning and resume falls back to the newest
+    intact one — a crash mid-`save_training` must not brick the run it
+    exists to protect. An explicitly named step dir is returned as-is
+    (restore will raise `CorruptCheckpointError` if it is bad — an
+    explicit ask should fail loudly, not silently resolve elsewhere)."""
     path = pathlib.Path(path)
     if (path / SIDECAR).exists():
         return path
-    step = ckpt.latest_step(path)
-    if step is None:
+    steps = ckpt.steps(path)
+    if not steps:
         raise FileNotFoundError(f"no training checkpoints under {path}")
-    return path / f"step_{step}"
+    for step in reversed(steps):
+        cand = path / f"step_{step}"
+        if ckpt.verify(cand) and (cand / SIDECAR).exists():
+            if step != steps[-1]:
+                import warnings
+                warnings.warn(
+                    f"checkpoint step_{steps[-1]} under {path} is corrupted"
+                    f" or incomplete — falling back to step_{step}",
+                    RuntimeWarning, stacklevel=2)
+            return cand
+    raise ckpt.CorruptCheckpointError(
+        f"every checkpoint under {path} fails integrity verification")
 
 
 def load_training(path, like_state, ring=None, accountant=None):

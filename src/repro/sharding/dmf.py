@@ -229,7 +229,8 @@ def build_outbox(gp, tbl_idx, tbl_wgt, vj):
 
 def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
                           cfg: dmf_lib.DMFConfig, prop_now=None,
-                          online_local=None):
+                          online_local=None, byz=None, amul=None, ashill=None,
+                          dirs=None, vjm=None, bkt=None, byz_cap=0):
     """One minibatch of Alg. 1 on one shard: local gathers + Eq. 9-11 via
     the SAME `dmf._step_deltas` as the single-device paths (the equivalence
     suite leans on that), local U/Q scatters, and the cross-shard P-gradient
@@ -252,7 +253,18 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     its neighbor deliveries come from the delay ring later; ``online_local``
     (rows,) zeroes received weights into this shard's offline rows.
     Returns the released message block ``gp`` too (the churn epoch buffers
-    it); the fault-free epoch discards it."""
+    it); the fault-free epoch discards it.
+
+    Byzantine path (``byz`` a static `DefenseConfig`; None = untouched
+    trace, see `dmf._sparse_batch_update_messages`): the sender's line-11
+    self update stays honest and pre-outbox; outgoing messages are
+    corrupted per the routed attack arrays BEFORE `build_outbox` (what
+    crosses the wire is the corrupted release — the outbox purity
+    invariant holds with gp replaced by the adversary's choice), screened
+    on the RECEIVING shard after the `all_to_all` (each shard defends
+    itself), and robust-combined per (receiver, item) bucket when
+    ``byz.aggregation != "sum"`` (``bkt`` the host-compiled per-shard
+    `MessageGroups` arrays in received-slot order)."""
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
         du, gp, dq, loss = dmf_lib._step_deltas_dp(
@@ -263,7 +275,9 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
-    if cfg.mode != "ldmf":
+    if cfg.mode == "ldmf":
+        return U, P, Q, loss, gp
+    if byz is None:
         # lines 11 + 13-15 across shards: gather the batch senders' rows of
         # the destination-partitioned table, exchange, scatter locally.
         pi, pw = pidx[ui], pwgt[ui]                  # (B, D, S)
@@ -282,7 +296,56 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
             rw = rw * online_local[ri]               # offline receivers get 0
         upd = rw[..., None] * rg[:, :, None, :]      # (D, B, S, K)
         P = P.at[ri, rv[:, :, None]].add(-theta * upd)
-    return U, P, Q, loss, gp
+        return U, P, Q, loss, gp
+    from repro.robustness import byzantine as byz_lib
+    K = gp.shape[-1]
+    pi, pw = pidx[ui], pwgt[ui]                      # (B, D, S)
+    me = jax.lax.axis_index(AXIS)
+    D = pi.shape[1]
+    selfm = ((jnp.arange(D)[None, :, None] == me)
+             & (pi == ui[:, None, None])).astype(pw.dtype)
+    w_self = jnp.sum(pw * selfm, axis=(1, 2))
+    if online_local is not None:
+        w_self = w_self * online_local[ui]
+    P = P.at[ui, vj].add(-theta * w_self[:, None] * gp)
+    pw_msg = pw * (1.0 - selfm)
+    if prop_now is not None:
+        pw_msg = pw_msg * prop_now[:, None, None]
+    gp_sent = gp
+    if amul is not None:
+        gp_sent = byz_lib.corrupt_messages(gp, amul, ashill, dirs[ui])
+    vj_out = vjm if vjm is not None else vj
+    out_w, out_i, out_g, out_v = build_outbox(gp_sent, pi, pw_msg, vj_out)
+    rw = jax.lax.all_to_all(out_w, AXIS, 0, 0)       # (D, B, S) source-major
+    ri = jax.lax.all_to_all(out_i, AXIS, 0, 0)
+    rg = jax.lax.all_to_all(out_g, AXIS, 0, 0)       # (D, B, K)
+    rv = jax.lax.all_to_all(out_v, AXIS, 0, 0)       # (D, B)
+    if online_local is not None:
+        rw = rw * online_local[ri]
+    if byz.screen:
+        ok = byz_lib.screen_ok(rg, byz.norm_cap)     # (D, B)
+        rg = jnp.where(ok[..., None] > 0, rg, 0.0)
+        rw = rw * ok[:, :, None]
+    # 0·NaN = NaN: zero-weight slots must deliver exactly 0 even when the
+    # (undefended) message content is a bomb. With screening on, rg is
+    # already zeroed wherever it was non-finite, so the plain multiply is
+    # safe — and ±0 contributions leave the scatter-add bitwise unchanged.
+    if byz.screen:
+        upd = rw[..., None] * rg[:, :, None, :]
+    else:
+        upd = jnp.where((rw > 0)[..., None],
+                        rw[..., None] * rg[:, :, None, :], 0.0)
+    if byz.aggregation == "sum":
+        P = P.at[ri, rv[:, :, None]].add(-theta * upd)
+    else:
+        b_id, b_pos, b_recv, b_item = bkt
+        vals = upd.reshape(-1, K)                    # (D·B·S, K) recv order
+        validity = (rw > 0).astype(gp.dtype).reshape(-1)
+        comb = byz_lib.robust_combine(
+            vals, validity, b_id.reshape(-1), b_pos.reshape(-1),
+            b_recv.shape[-1], byz_cap, byz)
+        P = P.at[b_recv, b_item].add(-theta * comb)
+    return U, P, Q, loss, gp_sent
 
 
 @functools.partial(
@@ -337,11 +400,15 @@ def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "mesh", "use_ring"),
+    jax.jit,
+    static_argnames=("cfg", "mesh", "use_ring", "byz", "use_attack",
+                     "byz_cap"),
     donate_argnums=(0, 1, 2))
 def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                          valid, rid, prop_now, online, ring_gp, ring_ui,
-                         ring_vj, ring_deliver, dp_seed, cfg, mesh, use_ring):
+                         ring_vj, ring_deliver, dp_seed, amul, ashill, vjm,
+                         dirs, b_id, b_pos, b_recv, b_item, cfg, mesh,
+                         use_ring, byz=None, use_attack=False, byz_cap=0):
     """`_epoch_sharded` under a fault schedule — STILL one SPMD dispatch.
 
     Extra inputs: the fault gates (``prop_now`` routed like the batches,
@@ -358,14 +425,22 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
 
     Under the trivial schedule (gates all ones, ``use_ring=False``) every
     fault op multiplies by 1.0 — the outputs are bitwise `_epoch_sharded`'s.
-    """
+
+    Byzantine args (``byz``/``use_attack``/``byz_cap`` static; attack
+    arrays routed like the batches, ``dirs`` row-sharded, bucket arrays in
+    per-destination received-slot order with spec P(None, learners)):
+    with ``byz=None`` every one is a statically dead input and the trace
+    is unchanged. Ring messages are screened AT DELIVERY on the receiving
+    shard — stale corrupted messages don't dodge the gate."""
     from repro.privacy import mechanism
     noise_on = cfg.dp and cfg.mode != "ldmf" and mechanism.noise_std(cfg) > 0
     theta = cfg.lr
+    robust = byz is not None and byz.aggregation != "sum"
 
     def shard_body(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf, valid,
                    rid, prop_now, online, ring_gp, ring_ui, ring_vj,
-                   ring_deliver, dp_seed):
+                   ring_deliver, dp_seed, amul, ashill, vjm, dirs, b_id,
+                   b_pos, b_recv, b_item):
         ui, vj, r, conf, valid, rid, prop_now = (
             x[:, 0] for x in (ui, vj, r, conf, valid, rid, prop_now))
         rows = U.shape[0]
@@ -379,8 +454,17 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
             selfm = ((me * rows + di) == ring_ui[:, None]).astype(dw.dtype)
             dw = (dw * (1.0 - selfm) * online[di]
                   * ring_deliver[:, None])
-            P = P.at[di, ring_vj[:, None]].add(
-                -theta * dw[:, :, None] * gflat[:, None, :])
+            if byz is not None:
+                from repro.robustness import byzantine as byz_lib
+                if byz.screen:
+                    okd = byz_lib.screen_ok(gflat, byz.norm_cap)
+                    gflat = jnp.where(okd[:, None] > 0, gflat, 0.0)
+                    dw = dw * okd[:, None]
+                dupd = jnp.where((dw > 0)[:, :, None],
+                                 dw[:, :, None] * gflat[:, None, :], 0.0)
+            else:
+                dupd = dw[:, :, None] * gflat[:, None, :]
+            P = P.at[di, ring_vj[:, None]].add(-theta * dupd)
         if noise_on:
             from repro.kernels.dp_noise import gauss_counter
             nb = ui.shape[0]
@@ -388,17 +472,37 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                 nb * cfg.batch_size, dtype=jnp.int32).reshape(-1, 1)
             Z = mechanism.noise_std(cfg) * gauss_counter(dp_seed, all_rid, K)
 
+        xs = [ui, vj, r, conf, valid, rid, prop_now]
+        if use_attack:
+            xs += [amul[:, 0], ashill[:, 0]]
+        if byz is not None:
+            xs.append(vjm[:, 0])
+        if robust:
+            xs += [b_id[:, 0], b_pos[:, 0], b_recv[:, 0], b_item[:, 0]]
+
         def body(carry, batch):
             U, P, Q = carry
-            b_ui, b_vj, b_r, b_conf, b_val, b_rid, b_prop = batch
+            b_ui, b_vj, b_r, b_conf, b_val, b_rid, b_prop = batch[:7]
+            i = 7
+            b_amul = b_ashill = b_vjm = bkt = None
+            if use_attack:
+                b_amul, b_ashill = batch[i], batch[i + 1]
+                i += 2
+            if byz is not None:
+                b_vjm = batch[i]
+                i += 1
+            if robust:
+                bkt = batch[i:i + 4]
             U, P, Q, loss, gp = _sharded_batch_update(
                 U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
                 Z[b_rid] if noise_on else None, cfg,
-                prop_now=b_prop, online_local=online)
+                prop_now=b_prop, online_local=online, byz=byz,
+                amul=b_amul, ashill=b_ashill,
+                dirs=dirs if use_attack else None, vjm=b_vjm, bkt=bkt,
+                byz_cap=byz_cap)
             return (U, P, Q), ((loss, gp) if use_ring else loss)
 
-        (U, P, Q), ys = jax.lax.scan(
-            body, (U, P, Q), (ui, vj, r, conf, valid, rid, prop_now))
+        (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), tuple(xs))
         if use_ring:
             losses, gps = ys
             # replicated released-message stream block for the delay ring:
@@ -419,11 +523,15 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
                   P_(None, AXIS), P_(AXIS),
-                  P_(), P_(), P_(), P_(), P_()),
+                  P_(), P_(), P_(), P_(), P_(),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS), P_(AXIS),
+                  P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
+                  P_(None, AXIS)),
         out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS), P_()),
         check_vma=False,
     )(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf, valid, rid,
-      prop_now, online, ring_gp, ring_ui, ring_vj, ring_deliver, dp_seed)
+      prop_now, online, ring_gp, ring_ui, ring_vj, ring_deliver, dp_seed,
+      amul, ashill, vjm, dirs, b_id, b_pos, b_recv, b_item)
 
 
 def train_epoch_churn_sharded(
@@ -436,13 +544,22 @@ def train_epoch_churn_sharded(
     schedule,                   # robustness.faults.ChurnPlan
     ring,                       # robustness.faults.DelayRing | None
     accountant=None,
+    attack=None,                # robustness.byzantine.AttackPlan | None
+    byz=None,                   # robustness.byzantine.DefenseConfig | None
 ) -> tuple[dmf_lib.DMFState, float]:
     """Sharded counterpart of `dmf.train_epoch_churn`: the same sampled
     stream and fault gates (host-side, shard-count-independent), rows and
     gates routed to home shards, one SPMD dispatch per epoch. The delay
     ring is replicated — its written content is the psum-assembled global
     released-message stream, so a run's ring state is invariant to the
-    mesh width (and a resume can switch shard counts)."""
+    mesh width (and a resume can switch shard counts).
+
+    ``attack``/``byz`` mirror the single-device path: the attack arrays
+    are realized on the ROUTED stream (same per-(user, epoch) corruption,
+    whatever shard a row landed on), message-bucket membership is compiled
+    per destination shard in received-slot order, and screening decisions
+    depend only on message content + τ — all shard-count invariant
+    (tests/test_byzantine.py pins defended runs across mesh widths)."""
     plan = _as_plan(prop, cfg)
     ui, vj, r, conf = dmf_lib.sample_epoch(train, cfg, rng)
     B = cfg.batch_size
@@ -473,6 +590,41 @@ def train_epoch_churn_sharded(
         r_vj = np.zeros(1, np.int32)
         r_del = np.zeros(1, np.float32)
         ring_gp = jnp.zeros((1, 1, cfg.dim), jnp.float32)
+    use_attack = attack is not None
+    K = cfg.dim
+    if use_attack:
+        assert byz is not None
+        # realize the attack on the routed stream by GLOBAL user id —
+        # identical per-(user, epoch) corruption at every mesh width;
+        # padded slots are forced honest via the routed validity
+        gl_ui = (np.arange(cfg.n_shards)[None, :, None] * plan.rows
+                 + ui_l).astype(np.int64)
+        amul, ashill, vjm = attack.epoch_row_attack(
+            t, gl_ui, vj_s, sender_on=(valid > 0))
+        # the ring buffers the UNSHARDED stream: same realization there
+        amul_g, ashill_g, vjm_g = attack.epoch_row_attack(
+            t, ui2, vj2, sender_on=sender_on)
+        dirs_pad = np.zeros((plan.n_rows_padded, K), np.float32)
+        dirs_pad[: schedule.n_users] = attack.dirs
+        dirs = jnp.asarray(dirs_pad)
+    else:
+        amul = ashill = np.zeros((1, cfg.n_shards, 1), np.float32)
+        vjm = vj_s
+        vjm_g = vj2
+        dirs = jnp.zeros((cfg.n_shards, K), jnp.float32)
+    robust = byz is not None and byz.aggregation != "sum"
+    if robust:
+        from repro.robustness import byzantine as byz_lib
+        groups = byz_lib.group_messages_sharded(
+            ui_l, vjm, valid, plan.part.idx, plan.part.wgt, plan.rows,
+            cfg.n_shards, cfg.n_items, prop_now=pnow_s, online=online_pad)
+        gb = (jnp.asarray(groups.bucket_id), jnp.asarray(groups.pos),
+              jnp.asarray(groups.recv), jnp.asarray(groups.item))
+        byz_cap = groups.cap
+    else:
+        z3 = np.zeros((1, cfg.n_shards, 1), np.int32)
+        gb = (z3, z3, z3, z3)
+        byz_cap = 0
     st = shard_state(state, plan)
     U, Pm, Q, losses, blk = _epoch_sharded_churn(
         st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
@@ -481,9 +633,12 @@ def train_epoch_churn_sharded(
         jnp.asarray(conf_s), jnp.asarray(valid), jnp.asarray(rid),
         jnp.asarray(pnow_s), jnp.asarray(online_pad),
         ring_gp, jnp.asarray(r_ui), jnp.asarray(r_vj), jnp.asarray(r_del),
-        jnp.asarray(dp_seed, jnp.int32), cfg, plan.mesh, use_ring)
+        jnp.asarray(dp_seed, jnp.int32),
+        jnp.asarray(amul), jnp.asarray(ashill), jnp.asarray(vjm), dirs,
+        gb[0], gb[1], gb[2], gb[3],
+        cfg, plan.mesh, use_ring, byz, use_attack, byz_cap)
     if use_ring:
-        ring.write(t, blk, ui2, vj2, due)
+        ring.write(t, blk, ui2, vjm_g if byz is not None else vj2, due)
     total = float(np.asarray(losses, dtype=np.float64).sum())
     realized = int(sender_on.sum())
     return dmf_lib.DMFState(U, Pm, Q), total / max(realized, 1)

@@ -31,6 +31,7 @@ RUN_SECTIONS = {
     "scheduler": "benchmarks.scheduler_bench",
     "privacy": "benchmarks.privacy_bench",
     "robustness": "benchmarks.churn_bench",
+    "byzantine": "benchmarks.byzantine_bench",
     "complexity": "benchmarks.complexity",
     "gossip_ablation": "benchmarks.gossip_ablation",
     "perf_report": "benchmarks.perf_report",
@@ -242,6 +243,43 @@ def test_bench_churn_tiny_schema(bench_outdir):
         json.dumps(res, default=float))
 
 
+def test_bench_byzantine_tiny_schema(bench_outdir):
+    from benchmarks import byzantine_bench
+
+    res = byzantine_bench.main(tiny=True, n_timed=1, epochs=5)
+    for key in ("config", "anchor", "grid", "headline", "epochs_per_sec",
+                "screening_overhead_vs_base", "robust_agg_overhead_vs_base",
+                "dp_interaction"):
+        assert key in res, key
+    # the live wiring check: byz kwargs off IS the plain run
+    assert res["anchor"]["byz_off_gap"] == 0.0, (
+        "attack=None/defense=None drifted from the plain fit")
+    grid = res["grid"]
+    assert len(grid) == len(res["config"]["families"]) * 3
+    for row in grid:
+        for m in ("family", "defense", "frac", "final_train_loss",
+                  "loss_ratio_vs_faultfree", "nonfinite", "halted_at"):
+            assert m in row, m
+        # a collapsed run reports null loss, never NaN in the artifact
+        if row["nonfinite"]:
+            assert row["final_train_loss"] is None
+        else:
+            assert row["final_train_loss"] > 0
+    h = res["headline"]
+    assert h["undefended_collapsed"] is True
+    assert h["defended_within_1p5x"] is True
+    assert not any(r["nonfinite"] for r in grid if r["defense"] != "undefended")
+    for k in ("sparse_scan", "screen", "screen_trim"):
+        assert res["epochs_per_sec"][k] > 0
+    dp = res["dp_interaction"]
+    assert dp["honest_pass_rate"] >= 0.999
+    assert dp["tau_calibrated"] > dp["dp_clip"]
+    assert dp["defended_nonfinite"] is False
+    _assert_finite(res)
+    assert _assert_mirrored("BENCH_byzantine", bench_outdir) == json.loads(
+        json.dumps(res, default=float))
+
+
 def test_run_only_parsing_validates_sections():
     from benchmarks import run as run_mod
 
@@ -279,5 +317,5 @@ def test_bench_mains_accept_full_flag():
         params = inspect.signature(fn).parameters
         if section in ("paper_tables", "convergence", "reg_sweep",
                        "walk_sweep", "dmf_train", "serving", "scheduler",
-                       "privacy", "robustness", "complexity"):
+                       "privacy", "robustness", "byzantine", "complexity"):
             assert "full" in params, f"{module}.main lost full="

@@ -1,0 +1,370 @@
+"""Byzantine-robust gradient exchange (src/repro/robustness/byzantine.py):
+attack-plan compilation determinism, sender-boundary corruption semantics,
+receiver-side screening (finite check + calibrated norm cap), robust
+trimmed-mean/median aggregation, the no-attack/no-defense bit-exactness
+contract with the PR 1-8 paths (single-device and every shard count, DP
+and churn on), DelayRing × attack delivery screening, the degradation
+envelope, and the divergence sentinel (DESIGN.md §13)."""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.privacy import audit, screening_threshold
+from repro.robustness import ChurnConfig
+from repro.robustness.byzantine import (AttackConfig, DefenseConfig,
+                                        AttackPlan, group_messages,
+                                        no_attack, robust_combine, screen_ok)
+
+pytestmark = pytest.mark.byzantine
+
+EPOCHS = 5
+
+
+def _world(n_users=80, n_items=50, n_ratings=600, seed=0):
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=n_users, n_items=n_items, n_ratings=n_ratings, n_cities=4,
+        seed=seed))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    return ds, graph.walk_neighbor_table(W, gcfg)
+
+
+def _cfg(ds, **kw):
+    base = dict(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                batch_size=64, beta=0.1, gamma=0.01)
+    base.update(kw)
+    return dmf.DMFConfig(**base)
+
+
+def _assert_states_equal(a, b, **tol):
+    for name in ("U", "P", "Q"):
+        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        if tol:
+            np.testing.assert_allclose(x, y, **tol, err_msg=name)
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Attack-plan compilation
+# ---------------------------------------------------------------------------
+@settings(max_examples=12)
+@given(st.sampled_from(["nan", "inf", "norm_inflate", "sign_flip", "shill"]),
+       st.floats(min_value=0.05, max_value=0.5),
+       st.integers(min_value=0, max_value=4),
+       st.integers(min_value=0, max_value=100))
+def test_attack_plan_deterministic_and_seed_keyed(family, frac, start, seed):
+    ac = AttackConfig(family=family, frac=frac, scale=3.0, target_item=2,
+                      start_epoch=start, seed=seed)
+    a, b = ac.compile(96, 8, 6), ac.compile(96, 8, 6)
+    np.testing.assert_array_equal(a.malicious, b.malicious)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.dirs, b.dirs)
+    assert a.n_malicious == max(1, int(round(frac * 96)))
+    # sleeper agents: statically inactive before their start epoch
+    assert not a.active[:start].any()
+    if start < 8:
+        assert a.active[start:, a.malicious].all()
+    c = dataclasses.replace(ac, seed=seed + 1).compile(96, 8, 6)
+    assert (a.malicious != c.malicious).any()
+
+
+def test_attack_plan_trivial_and_collusion():
+    assert no_attack(16, 4, 6).is_trivial()
+    assert AttackConfig(family="none").compile(16, 4, 6).is_trivial()
+    assert AttackConfig(family="nan", frac=0.0).compile(16, 4, 6).is_trivial()
+    assert not AttackConfig(family="nan", frac=0.2).compile(16, 4, 6).is_trivial()
+    # colluding shills share ONE direction; independent ones don't
+    co = AttackConfig(family="shill", frac=0.5, scale=2.0, collude=True,
+                      seed=1).compile(32, 2, 6)
+    mal = np.where(co.malicious)[0]
+    assert all((co.dirs[m] == co.dirs[mal[0]]).all() for m in mal)
+    ind = dataclasses.replace(
+        AttackConfig(family="shill", frac=0.5, scale=2.0, seed=1),
+        collude=False).compile(32, 2, 6)
+    imal = np.where(ind.malicious)[0]
+    assert any((ind.dirs[m] != ind.dirs[imal[0]]).any() for m in imal[1:])
+    # shill directions carry the attack magnitude
+    np.testing.assert_allclose(np.linalg.norm(co.dirs[mal], axis=1), 2.0,
+                               rtol=1e-5)
+
+
+def test_epoch_row_attack_gating():
+    plan = AttackConfig(family="norm_inflate", frac=0.5, scale=7.0,
+                        seed=0).compile(16, 3, 4)
+    mal = np.where(plan.malicious)[0]
+    hon = np.where(~plan.malicious)[0]
+    ui = np.concatenate([mal[:2], hon[:2], [999]]).astype(np.int64)
+    vj = np.arange(5, dtype=np.int32)
+    amul, ashill, vjm = plan.epoch_row_attack(0, ui, vj)
+    np.testing.assert_array_equal(amul, [7.0, 7.0, 1.0, 1.0, 1.0])
+    assert not ashill.any()
+    np.testing.assert_array_equal(vjm, vj)   # non-shill never re-addresses
+    # offline senders can't attack (their messages are lost anyway, but the
+    # realized mask must not mark them malicious-active)
+    g = np.array([0.0, 1.0, 1.0, 1.0, 1.0], np.float32)
+    amul2, _, _ = plan.epoch_row_attack(0, ui, vj, sender_on=g)
+    np.testing.assert_array_equal(amul2, [1.0, 7.0, 1.0, 1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Screening + robust combine primitives
+# ---------------------------------------------------------------------------
+def test_screen_ok_semantics():
+    g = jnp.array([[1.0, 2.0, 2.0], [np.nan, 0.0, 0.0],
+                   [np.inf, 1.0, 1.0], [30.0, 0.0, 0.0], [0.0, 0.0, 0.0]])
+    np.testing.assert_array_equal(screen_ok(g, 10.0), [1, 0, 0, 0, 1])
+    # infinite cap = finite check only
+    np.testing.assert_array_equal(screen_ok(g, math.inf), [1, 0, 0, 1, 1])
+    # boundary: exactly tau passes
+    np.testing.assert_array_equal(screen_ok(g, 3.0), [1, 0, 0, 0, 1])
+
+
+def test_robust_combine_trim_and_median_math():
+    vals = jnp.array([[1.0], [2.0], [100.0], [3.0], [5.0], [77.0]])
+    validity = jnp.array([1.0, 1.0, 1.0, 1.0, 1.0, 0.0])
+    bucket = jnp.array([0, 0, 0, 0, 1, 2], jnp.int32)   # 2 = overflow
+    pos = jnp.array([0, 1, 2, 3, 0, 0], jnp.int32)
+    trim = DefenseConfig(aggregation="trim", trim_frac=0.25)
+    got = robust_combine(vals, validity, bucket, pos, 2, 4, trim)
+    # bucket 0: sorted [1,2,3,100], k=1 -> mean(2,3)*4 = 10; bucket 1: 5
+    np.testing.assert_allclose(np.asarray(got), [[10.0], [5.0]])
+    med = DefenseConfig(aggregation="median")
+    got = robust_combine(vals, validity, bucket, pos, 2, 4, med)
+    np.testing.assert_allclose(np.asarray(got), [[10.0], [5.0]])
+    # no outlier pressure: trim equals plain summation
+    clean = jnp.array([[1.0], [2.0], [2.5], [3.0], [5.0], [0.0]])
+    got = robust_combine(clean, validity, bucket, pos, 2, 4,
+                         DefenseConfig(aggregation="trim", trim_frac=0.0))
+    np.testing.assert_allclose(np.asarray(got), [[8.5], [5.0]], rtol=1e-6)
+    # empty bucket combines to exactly zero (no inf sentinel leakage)
+    none = robust_combine(vals, jnp.zeros(6), bucket, pos, 2, 4, med)
+    np.testing.assert_array_equal(np.asarray(none), np.zeros((2, 1)))
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=2, max_value=40),
+       st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=1000))
+def test_group_messages_invariants(B, S, seed):
+    rng = np.random.default_rng(seed)
+    nb, I, J = 2, 12, 7
+    ui = rng.integers(0, I, (nb, B)).astype(np.int64)
+    vj = rng.integers(0, J, (nb, B)).astype(np.int32)
+    idx = rng.integers(0, I, (I, S)).astype(np.int32)
+    wgt = (rng.random((I, S)) * (rng.random((I, S)) > 0.2)).astype(np.float32)
+    mg = group_messages(ui, vj, idx, wgt, J)
+    assert mg.bucket_id.shape == (nb, B, S) and mg.pos.shape == (nb, B, S)
+    for b in range(nb):
+        fb = mg.bucket_id[b].reshape(-1)
+        fp = mg.pos[b].reshape(-1)
+        fr = idx[ui[b]].reshape(-1)
+        fi = np.broadcast_to(vj[b][:, None], (B, S)).reshape(-1)
+        v = fb < mg.n_buckets
+        pairs = list(zip(fb[v].tolist(), fp[v].tolist()))
+        assert len(pairs) == len(set(pairs)), "bucket position collision"
+        assert (fp < mg.cap).all()
+        for slot in np.flatnonzero(v):
+            assert mg.recv[b, fb[slot]] == fr[slot]
+            assert mg.item[b, fb[slot]] == fi[slot]
+        # self slots and zero-weight slots land in the overflow bucket
+        w = wgt[ui[b]].reshape(-1)
+        dead = (w <= 0) | (fr == np.repeat(ui[b], S))
+        assert (fb[dead] == mg.n_buckets).all()
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: no attack + defenses off IS the PR 1-8 program
+# ---------------------------------------------------------------------------
+def test_byz_off_bitexact_single_device():
+    ds, nbr = _world()
+    plain = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, test=ds.test)
+    off = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, test=ds.test,
+                  attack=None, defense=None)
+    assert off.train_losses == plain.train_losses
+    _assert_states_equal(off.state, plain.state)
+    # a compiled-trivial attack (frac=0) is statically removed too
+    triv = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, test=ds.test,
+                   attack=AttackConfig(family="none"))
+    _assert_states_equal(triv.state, plain.state)
+
+
+def test_byz_off_bitexact_with_dp_and_churn():
+    ds, nbr = _world()
+    cfg = _cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=3)
+    cc = ChurnConfig(dropout=0.2, delay_classes=(0, 1), seed=4)
+    plain = dmf.fit(cfg, ds.train, nbr, epochs=EPOCHS, churn=cc)
+    off = dmf.fit(cfg, ds.train, nbr, epochs=EPOCHS, churn=cc,
+                  attack=None, defense=None)
+    assert off.train_losses == plain.train_losses
+    _assert_states_equal(off.state, plain.state)
+
+
+@pytest.mark.sharded
+def test_byz_off_bitexact_sharded_with_dp():
+    ds, nbr = _world()
+    for n_shards in (1, 2, 4, 8):
+        cfg = _cfg(ds, n_shards=n_shards, dp_sigma=0.5, dp_clip=1.0,
+                   dp_seed=3)
+        plain = dmf.fit(cfg, ds.train, nbr, epochs=EPOCHS)
+        off = dmf.fit(cfg, ds.train, nbr, epochs=EPOCHS,
+                      attack=None, defense=None)
+        assert off.train_losses == plain.train_losses, n_shards
+        _assert_states_equal(off.state, plain.state)
+
+
+# ---------------------------------------------------------------------------
+# Screening and robust aggregation under live attacks
+# ---------------------------------------------------------------------------
+def test_nan_bomb_screened_out():
+    ds, nbr = _world()
+    atk = AttackConfig(family="nan", frac=0.2, seed=5)
+    und = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, attack=atk,
+                  on_nonfinite="halt")
+    assert und.diverged_at is not None          # the bomb really lands
+    dfd = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, attack=atk,
+                  defense=DefenseConfig(screen=True))
+    assert np.isfinite(dfd.train_losses).all()
+    for n in ("U", "P", "Q"):
+        assert np.isfinite(np.asarray(getattr(dfd.state, n))).all(), n
+
+
+def test_degradation_envelope_norm_inflation():
+    """The acceptance contract: 20% malicious with lambda=100 collapses the
+    undefended run (>=5x fault-free loss or non-finite) while screening +
+    trimmed-mean holds the defended run within 1.5x."""
+    ds, nbr = _world()
+    anchor = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS)
+    base = anchor.train_losses[-1]
+    atk = AttackConfig(family="norm_inflate", frac=0.2, scale=100.0, seed=5)
+    und = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, attack=atk,
+                  on_nonfinite="halt")
+    last = und.train_losses[-1]
+    assert (not np.isfinite(last)) or und.diverged_at is not None \
+        or last >= 5.0 * base
+    dfd = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, attack=atk,
+                  defense=DefenseConfig(screen=True, norm_cap=1.0,
+                                        aggregation="trim", trim_frac=0.25))
+    assert dfd.diverged_at is None
+    assert dfd.train_losses[-1] <= 1.5 * base
+
+
+def test_robust_aggregation_alone_tracks_plain():
+    """Trim/median with NO attackers is a benign re-aggregation: same
+    fixed point, final loss within a tight envelope of plain summation."""
+    ds, nbr = _world()
+    plain = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS)
+    for agg in ("trim", "median"):
+        got = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS,
+                      defense=DefenseConfig(aggregation=agg, trim_frac=0.25))
+        assert got.train_losses[-1] == pytest.approx(
+            plain.train_losses[-1], rel=0.02), agg
+
+
+def test_delayring_stale_malicious_message_screened_at_delivery():
+    """A straggler's corrupted message buffered k epochs in the DelayRing
+    must STILL be screened when it lands — the defense sits at delivery,
+    not only on the fresh path."""
+    ds, nbr = _world()
+    cc = ChurnConfig(dropout=0.0, delay_classes=(0, 1, 2), seed=4)
+    atk = AttackConfig(family="nan", frac=0.3, seed=5)
+    und = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, churn=cc,
+                  attack=atk, on_nonfinite="halt")
+    assert und.diverged_at is not None
+    dfd = dmf.fit(_cfg(ds), ds.train, nbr, epochs=EPOCHS, churn=cc,
+                  attack=atk, defense=DefenseConfig(screen=True))
+    assert np.isfinite(dfd.train_losses).all()
+    for n in ("U", "P", "Q"):
+        assert np.isfinite(np.asarray(getattr(dfd.state, n))).all(), n
+
+
+@pytest.mark.sharded
+def test_attack_defense_shard_invariant():
+    """Screening + robust aggregation compose with DP, churn and the ring
+    shard-invariantly: every mesh width reproduces the single-device run
+    within the cross-shard tolerance the repo pins elsewhere."""
+    ds, nbr = _world()
+    atk = AttackConfig(family="sign_flip", frac=0.2, seed=5)
+    dfn = DefenseConfig(screen=True, norm_cap=2.0, aggregation="median")
+    cc = ChurnConfig(dropout=0.2, delay_classes=(0, 1), seed=4)
+    cfg = _cfg(ds, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+    ref = dmf.fit(cfg, ds.train, nbr, epochs=EPOCHS, churn=cc, attack=atk,
+                  defense=dfn)
+    for n_shards in (2, 4, 8):
+        got = dmf.fit(dataclasses.replace(cfg, n_shards=n_shards), ds.train,
+                      nbr, epochs=EPOCHS, churn=cc, attack=atk, defense=dfn)
+        np.testing.assert_allclose(ref.train_losses, got.train_losses,
+                                   atol=1e-6, err_msg=str(n_shards))
+        _assert_states_equal(got.state, ref.state, rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Screening threshold calibration (privacy interplay)
+# ---------------------------------------------------------------------------
+def test_screening_threshold_calibration():
+    cfg = _cfg(_world()[0], dp_sigma=0.5, dp_clip=1.0)
+    tau = screening_threshold(cfg, 16, reject_prob=1e-6)
+    assert tau > cfg.dp_clip
+    # degenerate regimes: sigma=0 -> exactly C; no DP -> no cap
+    assert screening_threshold(
+        dataclasses.replace(cfg, dp_sigma=0.0), 16) == cfg.dp_clip
+    assert screening_threshold(
+        dataclasses.replace(cfg, dp_sigma=0.0, dp_clip=math.inf),
+        16) == math.inf
+    # empirically: honest clipped+noised messages pass at far better than
+    # the calibrated bound (Laurent-Massart is conservative)
+    rng = np.random.default_rng(0)
+    g = np.full((50_000, 16), 0.25)          # at the clip boundary
+    z = rng.normal(0.0, 0.5, (50_000, 16))
+    assert ((np.linalg.norm(g + z, axis=1) > tau).mean()) <= 1e-4
+
+
+def test_screening_report_on_honest_stream():
+    ds, nbr = _world()
+    cfg = _cfg(ds, dp_sigma=0.5, dp_clip=1.0, dp_seed=3)
+    log = audit.observe_messages(cfg, ds.train, nbr, epochs=2, seed=0)
+    tau = screening_threshold(cfg, cfg.dim, reject_prob=1e-6)
+    rep = audit.screening_report(log, tau, reject_prob=1e-6)
+    assert rep["pass_rate"] == 1.0 and rep["reject_rate"] == 0.0
+    assert rep["norm_max"] <= tau
+    # accept bit over an all-pass honest stream carries no rating signal
+    assert rep["accept_bit_rating_advantage"] == 0.0
+    assert rep["calibrated_reject_prob"] == 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Divergence sentinel
+# ---------------------------------------------------------------------------
+def test_divergence_sentinel_on_noise_blowup():
+    """Regression: an absurd DP noise scale (sigma*C >> 1) used to poison
+    the factors silently — the sentinel now warns/halts/raises."""
+    ds, nbr = _world()
+    cfg = _cfg(ds, lr=5.0, dp_sigma=40.0, dp_clip=25.0, dp_seed=3)
+    halted = dmf.fit(cfg, ds.train, nbr, epochs=12, on_nonfinite="halt")
+    assert halted.diverged_at is not None
+    for n in ("U", "P", "Q"):
+        assert np.isfinite(np.asarray(getattr(halted.state, n))).all(), n
+    # halt keeps the offending loss in the trace for post-mortems
+    assert len(halted.train_losses) == halted.diverged_at + 1
+    with pytest.raises(dmf.DivergenceError):
+        dmf.fit(cfg, ds.train, nbr, epochs=12, on_nonfinite="raise")
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        dmf.fit(cfg, ds.train, nbr, epochs=12, on_nonfinite="warn")
+    with pytest.raises(AssertionError):
+        dmf.fit(cfg, ds.train, nbr, epochs=2, on_nonfinite="explode")
+
+
+def test_sentinel_quiet_on_healthy_run():
+    ds, nbr = _world()
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        res = dmf.fit(_cfg(ds), ds.train, nbr, epochs=3, on_nonfinite="halt")
+    assert res.diverged_at is None
+    assert len(res.train_losses) == 3

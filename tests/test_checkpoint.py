@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import ckpt
 
@@ -67,6 +68,103 @@ def test_dmf_state_is_a_checkpointable_pytree(tmp_path):
     # unused padded tail really was preserved bit-for-bit, not re-zeroed
     np.testing.assert_array_equal(np.asarray(out.U)[I:],
                                   np.asarray(state.U)[I:])
+
+
+def test_restore_detects_corruption(tmp_path):
+    """A flipped byte on disk must surface as CorruptCheckpointError, not
+    as silently-wrong factors (ISSUE 9 integrity satellite)."""
+    tree = {"a": jnp.arange(16, dtype=jnp.float32),
+            "b": jnp.ones((3, 2), jnp.float32)}
+    path = tmp_path / "step_1"
+    ckpt.save(path, tree, step=1)
+    assert ckpt.verify(path) is True
+    f = path / "a.npy"
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    assert ckpt.verify(path) is False
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(path, like)
+    # a missing leaf is corruption too
+    f.unlink()
+    assert ckpt.verify(path) is False
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(path, like)
+
+
+def test_verify_passes_prechecksum_manifests(tmp_path):
+    """Manifests written before checksums existed (no sha256 key) must
+    keep restoring — integrity is opt-in by manifest version."""
+    import json
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    path = tmp_path / "step_1"
+    ckpt.save(path, tree, step=1)
+    mf = path / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    for info in manifest["leaves"].values():
+        del info["sha256"]
+    mf.write_text(json.dumps(manifest))
+    assert ckpt.verify(path) is True
+    out = ckpt.restore(path, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+def test_steps_lists_ascending(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in (7, 1, 12):
+        ckpt.save(tmp_path / f"step_{s}", tree, step=s)
+    assert ckpt.steps(tmp_path) == [1, 7, 12]
+    assert ckpt.latest_step(tmp_path) == 12
+    assert ckpt.steps(tmp_path / "nowhere") == []
+
+
+def test_resume_falls_back_to_newest_valid_snapshot(tmp_path):
+    """fit(resume_from=<root>) with a corrupted latest snapshot must warn
+    and resume from the newest intact one — and still reproduce the
+    uninterrupted run bit-for-bit from there."""
+    from repro.core import dmf, graph
+    from repro.data import synthetic_poi
+    from repro.robustness import recovery
+
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=60, n_items=40, n_ratings=400, n_cities=3, seed=0))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(n_users=ds.n_users, n_items=ds.n_items, dim=4,
+                        batch_size=64, beta=0.1, gamma=0.01)
+    full = dmf.fit(cfg, ds.train, nbr, epochs=4,
+                   checkpoint_dir=tmp_path, checkpoint_every=1)
+    assert ckpt.steps(tmp_path) == [1, 2, 3, 4]
+    # corrupt the two newest snapshots: fall back to step_2
+    for s in (3, 4):
+        leaf = sorted((tmp_path / f"step_{s}").glob("*.npy"))[0]
+        raw = bytearray(leaf.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        leaf.write_bytes(bytes(raw))
+    with pytest.warns(RuntimeWarning, match="falling back to step_2"):
+        assert recovery.resolve_step_dir(tmp_path).name == "step_2"
+    with pytest.warns(RuntimeWarning):
+        resumed = dmf.fit(cfg, ds.train, nbr, epochs=4,
+                          resume_from=tmp_path)
+    assert resumed.train_losses == full.train_losses
+    for n in ("U", "P", "Q"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full.state, n)),
+            np.asarray(getattr(resumed.state, n)), err_msg=n)
+    # an explicitly named corrupt step dir still fails loudly
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        dmf.fit(cfg, ds.train, nbr, epochs=4,
+                resume_from=tmp_path / "step_4")
+    # every snapshot corrupt -> CorruptCheckpointError, not silent restart
+    for s in (1, 2):
+        leaf = sorted((tmp_path / f"step_{s}").glob("*.npy"))[0]
+        raw = bytearray(leaf.read_bytes())
+        raw[0] ^= 0xFF
+        leaf.write_bytes(bytes(raw))
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        recovery.resolve_step_dir(tmp_path)
 
 
 def test_restore_into_model_params(tmp_path):
