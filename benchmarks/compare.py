@@ -1,0 +1,164 @@
+"""Bench-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.compare                 # all BENCH_*
+    PYTHONPATH=src python -m benchmarks.compare --only BENCH_serving
+    PYTHONPATH=src python -m benchmarks.compare --threshold 0.5
+
+For every ``BENCH_<section>.json`` committed at the repo root (the
+baseline the perf trajectory is tracked by — see `common.save_json`), the
+matching fresh artifact in ``benchmarks/results/`` is walked leaf-by-leaf
+and every TRACKED numeric leaf is compared:
+
+* **higher-is-better** leaves (throughput: ``*_per_sec``, ``*_rps``,
+  ``epochs_per_sec``, ``goodput``, ``slo_attainment``, accuracy ``P@``/
+  ``R@``, ``speedup``) regress when ``fresh < base * (1 - threshold)``;
+* **lower-is-better** leaves (latency ``p50/p95/p99_ms``, ``*_seconds``,
+  ``*_ms``, ``*_overhead*``, ``*_bytes``/``*_gb``) regress when
+  ``fresh > base * (1 + threshold)``.
+
+Leaves matching neither family (counts, flags, config echoes, loss gaps)
+are reported only with ``--all`` and never gate. The default threshold is
+deliberately loose (25%): CI machines are noisy, and this gate exists to
+catch step-function regressions (a kernel silently falling off its fast
+path), not 3% jitter. Exit status: 0 = no tracked regression, 1 =
+regression(s), 2 = nothing to compare. Imports no jax — safe anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from benchmarks.common import RESULTS, ROOT, fmt_table
+
+# substring → direction; first match wins, order matters (e.g. "_rps" must
+# not be shadowed by a lower-is-better family)
+HIGHER_BETTER = ("epochs_per_sec", "requests_per_sec", "_per_sec", "_rps",
+                 "goodput", "slo_attainment", "speedup", "pass_rate",
+                 "participation", "agreement", "P@", "R@")
+LOWER_BETTER = ("p50_ms", "p95_ms", "p99_ms", "_ms", "_seconds", "overhead",
+                "_bytes", "_gb", "wall_s")
+
+
+def direction(path: str) -> str | None:
+    """'up' (higher better), 'down' (lower better) or None (untracked) for
+    a $.dotted.leaf.path — matched on the path, so a p50_ms nested under
+    latency_ms is caught wherever it lives."""
+    for pat in HIGHER_BETTER:
+        if pat in path:
+            return "up"
+    for pat in LOWER_BETTER:
+        if pat in path:
+            return "down"
+    return None
+
+
+def numeric_leaves(obj, path="$") -> dict[str, float]:
+    """Flatten every finite numeric leaf to {dotted-path: value}. Bools are
+    config echoes, not measurements — skipped."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(numeric_leaves(v, f"{path}.{k}"))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(numeric_leaves(v, f"{path}[{i}]"))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        v = float(obj)
+        if v == v and abs(v) != float("inf"):
+            out[path] = v
+    return out
+
+
+def compare_one(name: str, base: dict, fresh: dict,
+                threshold: float) -> list[dict]:
+    """Per-leaf comparison rows for one artifact pair. A row is a dict
+    with bench/path/direction/base/fresh/delta_frac/regressed."""
+    b, f = numeric_leaves(base), numeric_leaves(fresh)
+    rows = []
+    for path in sorted(set(b) & set(f)):
+        d = direction(path)
+        bv, fv = b[path], f[path]
+        delta = (fv - bv) / abs(bv) if bv else (0.0 if fv == bv else
+                                                float("inf"))
+        # threshold on the move relative to |base| — a plain multiplicative
+        # band misfires when the baseline is negative (e.g. an overhead
+        # that measured slightly below zero) or exactly zero
+        band = threshold * max(abs(bv), 1e-12)
+        if d == "up":
+            reg = fv < bv - band
+        elif d == "down":
+            reg = fv > bv + band
+        else:
+            reg = False
+        rows.append({"bench": name, "path": path, "direction": d or "-",
+                     "base": bv, "fresh": fv, "delta_frac": delta,
+                     "regressed": bool(reg)})
+    return rows
+
+
+def run(baseline_dir=ROOT, fresh_dir=RESULTS, only=None,
+        threshold: float = 0.25) -> tuple[list[dict], list[str]]:
+    """Compare every baseline/fresh pair; returns (rows, missing-fresh
+    names). Baselines with no fresh artifact are reported, not failed —
+    a partial bench run shouldn't fake a regression."""
+    rows, missing = [], []
+    for p in sorted(pathlib.Path(baseline_dir).glob("BENCH_*.json")):
+        name = p.stem
+        if only and name not in only:
+            continue
+        fp = pathlib.Path(fresh_dir) / p.name
+        if not fp.exists():
+            missing.append(name)
+            continue
+        rows += compare_one(name, json.loads(p.read_text()),
+                            json.loads(fp.read_text()), threshold)
+    return rows, missing
+
+
+def render(rows, show_all: bool = False) -> str:
+    sel = [r for r in rows
+           if show_all or r["regressed"] or r["direction"] != "-"]
+    table = fmt_table(
+        ["bench", "leaf", "dir", "base", "fresh", "Δ%", "status"],
+        [[r["bench"], r["path"], r["direction"],
+          f"{r['base']:.4g}", f"{r['fresh']:.4g}",
+          f"{100 * r['delta_frac']:+.1f}",
+          "REGRESSED" if r["regressed"] else "ok"] for r in sel])
+    n_reg = sum(r["regressed"] for r in rows)
+    tracked = sum(r["direction"] != "-" for r in rows)
+    return (table + f"\n\n{len(rows)} leaves compared, {tracked} tracked, "
+            f"{n_reg} regressed")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression tolerance on tracked leaves "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated BENCH_* names (default: all "
+                         "committed baselines)")
+    ap.add_argument("--all", action="store_true",
+                    help="show untracked leaves in the table too")
+    ap.add_argument("--baseline-dir", default=str(ROOT))
+    ap.add_argument("--fresh-dir", default=str(RESULTS))
+    args = ap.parse_args(argv)
+    only = {s.strip() for s in args.only.split(",") if s.strip()} or None
+    rows, missing = run(args.baseline_dir, args.fresh_dir, only,
+                        args.threshold)
+    if missing:
+        print("no fresh artifact for: " + ", ".join(missing)
+              + " (run the matching `benchmarks.run --only` sections)")
+    if not rows:
+        print("nothing to compare")
+        return 2
+    print(render(rows, show_all=args.all))
+    return 1 if any(r["regressed"] for r in rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

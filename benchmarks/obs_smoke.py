@@ -1,0 +1,130 @@
+"""Observability smoke: the acceptance gate of the obs layer, runnable
+standalone and in CI.
+
+    PYTHONPATH=src python -m benchmarks.obs_smoke [--shards N]
+
+Runs a small DP + churn + byzantine training twice — telemetry/tracing
+off, then fully on — and asserts the hard contract:
+
+1. **bit-identical factors**: U/P/Q and the loss trajectory match the
+   off-run exactly (telemetry is reductions only — no rng, no writes);
+2. the per-epoch **telemetry JSONL** exists and every line carries loss,
+   ε-so-far, online count, ring occupancy and screening accepts;
+3. the exported **Chrome trace** is valid JSON with `traceEvents`
+   containing the `fit.epoch` spans;
+4. the **metrics registry** snapshot has the train_* series.
+
+Artifacts land in ``benchmarks/results/obs/`` (telemetry.jsonl,
+trace.json, metrics.jsonl, summary.json) — uploaded by CI, and
+``trace.json`` is the default measured-timing input for
+`benchmarks.roofline.measured_rows`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parent / "results" / "obs"
+
+REQUIRED_EVENT_KEYS = ("epoch", "train_loss", "dp_eps", "n_online",
+                       "ring_occupancy", "screen_accept", "n_messages")
+
+
+def main(shards: int = 1, epochs: int = 4) -> dict:
+    import numpy as np
+
+    from repro.core import dmf, graph
+    from repro.data import synthetic_poi
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as trace_lib
+    from repro.robustness import ChurnConfig
+    from repro.robustness.byzantine import AttackConfig, DefenseConfig
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    tele_path = OUT / "telemetry.jsonl"
+    trace_path = OUT / "trace.json"
+    metrics_path = OUT / "metrics.jsonl"
+    for p in (tele_path, metrics_path):
+        p.unlink(missing_ok=True)
+
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=50, n_ratings=600, n_cities=4, seed=0))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    cfg = dmf.DMFConfig(
+        n_users=ds.n_users, n_items=ds.n_items, dim=6, batch_size=64,
+        beta=0.1, gamma=0.01, n_shards=shards,
+        dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+    kw = dict(
+        epochs=epochs, test=ds.test,
+        churn=ChurnConfig(dropout=0.2, delay_classes=(0, 1), seed=4),
+        attack=AttackConfig(family="sign_flip", frac=0.2, seed=5),
+        defense=DefenseConfig(screen=True, norm_cap=2.0))
+
+    off = dmf.fit(cfg, ds.train, nbr, **kw)
+
+    trace_lib.configure_tracing(True)
+    trace_lib.get_tracer().clear()
+    on = dmf.fit(cfg, ds.train, nbr, telemetry=True,
+                 telemetry_out=tele_path, **kw)
+    trace_lib.get_tracer().export_chrome_trace(trace_path)
+    trace_lib.configure_tracing(False)
+    obs_metrics.get_registry().write_jsonl(metrics_path, event="obs_smoke")
+
+    # 1 — bit-identical trajectories
+    for nm in ("U", "P", "Q"):
+        a = np.asarray(getattr(off.state, nm))
+        b = np.asarray(getattr(on.state, nm))
+        assert (a == b).all(), f"{nm} diverged with telemetry on"
+    assert off.train_losses == on.train_losses, "loss trajectory diverged"
+
+    # 2 — JSONL telemetry stream
+    lines = [json.loads(l) for l in tele_path.read_text().splitlines()]
+    assert len(lines) == epochs, (len(lines), epochs)
+    for ev in lines:
+        missing = [k for k in REQUIRED_EVENT_KEYS if k not in ev]
+        assert not missing, f"epoch {ev.get('epoch')}: missing {missing}"
+        assert len(ev["messages_per_shard"]) == shards, ev
+    eps = [ev["dp_eps"] for ev in lines]
+    assert eps == sorted(eps), "dp_eps must be nondecreasing"
+
+    # 3 — valid Chrome trace with the fit spans
+    doc = json.loads(trace_path.read_text())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "fit.epoch" in names, names
+    assert sum(e["name"] == "fit.epoch" and e["ph"] == "X"
+               for e in doc["traceEvents"]) == epochs
+
+    # 4 — registry picked the training series up
+    snap = json.loads(metrics_path.read_text().splitlines()[-1])["metrics"]
+    for name in ("train_epochs_total", "train_loss", "train_dp_eps",
+                 "train_messages_total", "train_epoch_seconds"):
+        assert name in snap, name
+
+    summary = {
+        "shards": shards,
+        "epochs": epochs,
+        "bit_identical": True,
+        "n_trace_events": len(doc["traceEvents"]),
+        "final_event": lines[-1],
+    }
+    (OUT / "summary.json").write_text(json.dumps(summary, indent=1))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">1 needs that many devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--epochs", type=int, default=4)
+    args = ap.parse_args()
+    if args.shards > 1:
+        from repro.launch.mesh import ensure_host_platform_devices
+        ensure_host_platform_devices(args.shards)
+    s = main(shards=args.shards, epochs=args.epochs)
+    print("obs_smoke OK " + json.dumps(
+        {k: s[k] for k in ("shards", "epochs", "bit_identical",
+                           "n_trace_events")}))

@@ -296,7 +296,56 @@ def analytic_rows(chips=CHIPS) -> list[dict]:
     return rows
 
 
-def main(mesh_tag: str = "pod", sync: str = "allreduce"):
+MEASURED_TRACE = pathlib.Path(__file__).resolve().parent / "results" / \
+    "obs" / "trace.json"
+
+
+def measured_rows(trace_path=MEASURED_TRACE) -> list[dict]:
+    """Rows built from MEASURED host-side span timings (a Chrome-trace
+    JSON written by `repro.obs.trace` — e.g. `benchmarks/obs_smoke.py` or
+    `dmf_train --trace-out`). Each span name becomes one row whose compute
+    term is the measured mean wall time; memory/collective terms are zero
+    (a host-side span can't split them) and the row is tagged
+    ``collective_source: measured_trace`` / ``timing_source: measured`` so
+    it can never be mistaken for the analytic napkin math. Missing or
+    unreadable trace → empty list (the analytic fallback stands alone)."""
+    p = pathlib.Path(trace_path)
+    if not p.exists():
+        return []
+    try:
+        doc = json.loads(p.read_text())
+        events = doc.get("traceEvents", [])
+    except (json.JSONDecodeError, AttributeError):
+        return []
+    agg: dict[str, list[float]] = {}
+    for ev in events:
+        if ev.get("ph") == "X":
+            agg.setdefault(ev["name"], []).append(float(ev["dur"]) / 1e6)
+    rows = []
+    for name, durs in sorted(agg.items()):
+        mean_s = sum(durs) / len(durs)
+        rows.append({
+            "arch": "measured",
+            "shape": name,
+            "sync": "n/a",
+            "t_compute_s": mean_s,
+            "t_memory_s": 0.0,
+            "t_collective_s": 0.0,
+            "dominant": "measured",
+            "useful_ratio": 1.0,
+            "mfu_upper_bound": 0.0,
+            "step_lower_bound_s": mean_s,
+            "span_count": len(durs),
+            "span_total_s": sum(durs),
+            "span_max_s": max(durs),
+            "collective_source": "measured_trace",
+            "timing_source": "measured",
+        })
+    return rows
+
+
+def main(mesh_tag: str = "pod", sync: str = "allreduce",
+         trace_path=MEASURED_TRACE):
     rows = []
     for p in sorted(DRYRUN.glob(f"*__{mesh_tag}__{sync}.json")):
         rec = json.loads(p.read_text())
@@ -307,6 +356,7 @@ def main(mesh_tag: str = "pod", sync: str = "allreduce"):
         rows.append(row)
     if not rows:
         rows = analytic_rows()
+    rows += measured_rows(trace_path)
     return rows
 
 

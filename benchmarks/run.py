@@ -26,6 +26,10 @@ SECTIONS = (
 
 
 def _section(name):
+    # marker event in the span trace (no-op while tracing is disabled);
+    # repro.obs.trace imports no jax, so this is safe pre-device-flag
+    from repro.obs import trace as trace_lib
+    trace_lib.get_tracer().instant("bench.section", section=name)
     print(f"# --- {name} " + "-" * max(0, 60 - len(name)), flush=True)
 
 
@@ -53,6 +57,13 @@ def main() -> None:
                          "serving `sharded` sections need 8; 0 = leave the "
                          "jax default — sharded entries are then recorded "
                          "as skipped)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing (repro.obs.trace) for the "
+                         "whole run and write the Chrome-trace/Perfetto "
+                         "JSON here at the end")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append a final metrics-registry snapshot "
+                         "(JSONL) here at the end")
     args = ap.parse_args()
     if args.devices > 0:
         # must happen before ANY jax backend init — the bench modules are
@@ -62,6 +73,10 @@ def main() -> None:
 
         ensure_host_platform_devices(args.devices)
     only = parse_only(args.only)
+
+    if args.trace_out:
+        from repro.obs import trace as trace_lib
+        trace_lib.configure_tracing(True)
 
     from benchmarks import common
 
@@ -327,6 +342,18 @@ def main() -> None:
                 f"collective={r['t_collective_s']:.3e};dominant={r['dominant']};"
                 f"useful={r['useful_ratio']:.2f};src={r['collective_source']}"
             )
+
+    if args.trace_out:
+        from repro.obs import trace as trace_lib
+        trace_lib.get_tracer().export_chrome_trace(args.trace_out)
+        print(f"# trace written to {args.trace_out} "
+              f"({len(trace_lib.get_tracer().events())} events)", flush=True)
+    if args.metrics_out:
+        from repro.obs import metrics as obs_metrics
+        obs_metrics.get_registry().write_jsonl(args.metrics_out,
+                                               event="bench_run_final")
+        print(f"# metrics snapshot appended to {args.metrics_out}",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable
 
 import jax
@@ -275,7 +276,7 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
                                   dp_seed=None, noise=None, recv_gate=None,
                                   prop_now=None, byz=None, amul=None,
                                   ashill=None, dirs=None, vjm=None, bkt=None,
-                                  byz_cap=0):
+                                  byz_cap=0, tele=False):
     """One minibatch of Alg. 1 against the sparse neighbor table.
 
     Identical math to `_batch_step`; only the line 13-15 propagation differs:
@@ -310,6 +311,14 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
     summation when ``byz.aggregation != "sum"`` (``bkt`` the host-compiled
     `MessageGroups` arrays). Returns the SENT (post-corruption) messages —
     the delay ring must buffer what was actually released.
+
+    Telemetry (``tele``, static; obs/telemetry.py): when True a sixth
+    return value carries the ``TELE_W`` read-only reduction vector over
+    intermediates this step already computes — squared update norms,
+    released-message mass, scattered-propagation mass, delivery counts,
+    screening accept/reject. No rng draw, no factor write, so factor
+    trajectories are bit-identical with ``tele=False`` — and False (the
+    default) traces none of it: the compiled program is unchanged.
     """
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
@@ -322,7 +331,14 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
+    if tele:
+        z = jnp.zeros((), du.dtype)
+        u_sq = jnp.sum(du * du)
+        q_sq = jnp.sum(dq * dq) if cfg.mode != "gdmf" else z
     if cfg.mode == "ldmf":
+        if tele:   # purely local: nothing released, nothing scattered
+            return U, P, Q, loss, gp, jnp.stack(
+                [u_sq, q_sq, z, z, z, z, z])
         return U, P, Q, loss, gp
     if byz is None:
         # lines 11 + 13-15 via the neighbor table: sender b's gradient gp[b]
@@ -337,6 +353,14 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
             wb = wb * recv_gate[nb]                # offline receivers get 0
         upd = wb[:, :, None] * gp[:, None, :]      # (B, S, K)
         P = P.at[nb, vj[:, None]].add(-theta * upd)
+        if tele:
+            gp2 = jnp.sum(gp * gp, axis=-1)              # (B,)
+            selfm_t = (nb == ui[:, None]).astype(wb.dtype)
+            scatter_sq = theta * theta * jnp.sum(
+                gp2 * jnp.sum(wb * wb, axis=1))
+            n_msgs = jnp.sum((wb * (1.0 - selfm_t) > 0).astype(wb.dtype))
+            return U, P, Q, loss, gp, jnp.stack(
+                [u_sq, q_sq, jnp.sum(gp2), scatter_sq, n_msgs, z, z])
         return U, P, Q, loss, gp
     from repro.robustness import byzantine as byz_lib
     nb = nbr_idx[ui]                               # (B, S) receiver users
@@ -358,6 +382,7 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
         wmsg = wmsg * prop_now[:, None]
     if recv_gate is not None:
         wmsg = wmsg * recv_gate[nb]
+    wmsg_pre = wmsg   # pre-screen delivery weights (telemetry baseline)
     gp_eff = gp_sent
     if byz.screen:
         ok = byz_lib.screen_ok(gp_sent, byz.norm_cap)   # (B,)
@@ -375,6 +400,7 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
                         wmsg[:, :, None] * gp_eff[:, None, :], 0.0)
     if byz.aggregation == "sum":
         P = P.at[nb, vj_out[:, None]].add(-theta * upd)
+        scat = upd
     else:
         b_id, b_pos, b_recv, b_item = bkt
         K = gp.shape[-1]
@@ -384,18 +410,33 @@ def _sparse_batch_update_messages(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf,
             vals, validity, b_id.reshape(-1), b_pos.reshape(-1),
             b_recv.shape[-1], byz_cap, byz)
         P = P.at[b_recv, b_item].add(-theta * comb)
+        scat = comb
+    if tele:
+        n_pre = jnp.sum((wmsg_pre > 0).astype(wb.dtype))   # attempted
+        n_post = jnp.sum((wmsg > 0).astype(wb.dtype))      # survived screen
+        self_sq = jnp.sum((w_self[:, None] * gp) ** 2)
+        scatter_sq = theta * theta * (self_sq + jnp.sum(scat * scat))
+        return U, P, Q, loss, gp_sent, jnp.stack(
+            [u_sq, q_sq, jnp.sum(gp_sent * gp_sent), scatter_sq,
+             n_pre, n_post, n_pre - n_post])
     return U, P, Q, loss, gp_sent
 
 
 def _sparse_batch_update(U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg: DMFConfig,
-                         valid=None, rid=None, dp_seed=None, noise=None):
-    U, P, Q, loss, _ = _sparse_batch_update_messages(
+                         valid=None, rid=None, dp_seed=None, noise=None,
+                         tele=False):
+    out = _sparse_batch_update_messages(
         U, P, Q, nbr_idx, nbr_wgt, ui, vj, r, conf, cfg, valid, rid, dp_seed,
-        noise)
+        noise, tele=tele)
+    if tele:
+        U, P, Q, loss, _, tvec = out
+        return U, P, Q, loss, tvec
+    U, P, Q, loss, _ = out
     return U, P, Q, loss
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+@functools.partial(jax.jit, static_argnames=("cfg", "tele"),
+                   donate_argnums=(0, 1, 2))
 def _epoch_scan(
     U: jnp.ndarray,
     P: jnp.ndarray,
@@ -408,6 +449,7 @@ def _epoch_scan(
     conf: jnp.ndarray,
     dp_seed: jnp.ndarray,      # () int32 per-epoch mechanism seed (traced)
     cfg: DMFConfig,
+    tele: bool = False,        # static: emit the summed TELE_W reductions
 ):
     """A full epoch as one device-resident `lax.scan` over minibatches —
     one dispatch per epoch instead of a Python loop with a host sync
@@ -437,19 +479,26 @@ def _epoch_scan(
     def body(carry, batch):
         U, P, Q = carry
         b_ui, b_vj, b_r, b_conf = batch[:4]
-        U, P, Q, loss = _sparse_batch_update(
+        out = _sparse_batch_update(
             U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg,
-            noise=batch[4] if noise_on else None,
+            noise=batch[4] if noise_on else None, tele=tele,
         )
+        if tele:
+            U, P, Q, loss, tvec = out
+            return (U, P, Q), (loss, tvec)
+        U, P, Q, loss = out
         return (U, P, Q), loss
 
-    (U, P, Q), losses = jax.lax.scan(body, (U, P, Q), xs)
-    return U, P, Q, losses
+    (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), xs)
+    if tele:
+        losses, tvecs = ys
+        return U, P, Q, losses, tvecs.sum(axis=0)
+    return U, P, Q, ys
 
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "use_ring", "byz", "use_attack",
-                                    "byz_cap"),
+                                    "byz_cap", "tele"),
                    donate_argnums=(0, 1, 2))
 def _epoch_scan_churn(
     U: jnp.ndarray,
@@ -482,6 +531,7 @@ def _epoch_scan_churn(
     byz=None,                  # robustness.byzantine.DefenseConfig | None
     use_attack: bool = False,
     byz_cap: int = 0,
+    tele: bool = False,        # static: emit the summed TELE_W reductions
 ):
     """`_epoch_scan` under a fault schedule: same one-dispatch epoch, with
     (1) start-of-epoch delivery of the delay ring's messages due now —
@@ -557,21 +607,39 @@ def _epoch_scan_churn(
             i += 1
         if robust:
             bkt = batch[i:i + 4]
-        U, P, Q, loss, gp = _sparse_batch_update_messages(
+        out = _sparse_batch_update_messages(
             U, P, Q, nbr_idx, nbr_wgt, b_ui, b_vj, b_r, b_conf, cfg,
             valid=b_val, noise=b_noise,
             recv_gate=recv_gate, prop_now=b_prop,
             byz=byz, amul=b_amul, ashill=b_ashill,
             dirs=dirs if use_attack else None, vjm=b_vjm, bkt=bkt,
-            byz_cap=byz_cap,
+            byz_cap=byz_cap, tele=tele,
         )
-        return (U, P, Q), ((loss, gp) if use_ring else loss)
+        if tele:
+            U, P, Q, loss, gp, tvec = out
+        else:
+            U, P, Q, loss, gp = out
+        y = [loss]
+        if use_ring:
+            y.append(gp)
+        if tele:
+            y.append(tvec)
+        return (U, P, Q), (tuple(y) if len(y) > 1 else y[0])
 
     (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), tuple(xs))
+    tele_sum = None
+    if tele:
+        ys, tvecs = (ys[:-1], ys[-1])
+        tele_sum = tvecs.sum(axis=0)
+        ys = ys if use_ring else ys[0]
     if use_ring:
         losses, gps = ys
-        return U, P, Q, losses, gps
-    return U, P, Q, ys, None
+        out = (U, P, Q, losses, gps)
+    else:
+        out = (U, P, Q, ys, None)
+    if tele:
+        return out + (tele_sum,)
+    return out
 
 
 def train_epoch_churn(
@@ -586,6 +654,7 @@ def train_epoch_churn(
     accountant=None,
     attack=None,                # robustness.byzantine.AttackPlan | None
     byz=None,                   # robustness.byzantine.DefenseConfig | None
+    tele: bool = False,         # append the epoch's TELE_W device stats
 ) -> tuple[DMFState, float]:
     """`train_epoch` under a compiled `ChurnPlan` for epoch ``t``: the SAME
     sampled stream (same rng consumption, per-epoch DP seed included), with
@@ -605,7 +674,7 @@ def train_epoch_churn(
         from repro.sharding import dmf as sharded_dmf
         return sharded_dmf.train_epoch_churn_sharded(
             state, prop, train, cfg, rng, t, plan, ring,
-            accountant=accountant, attack=attack, byz=byz)
+            accountant=accountant, attack=attack, byz=byz, tele=tele)
     nbr = _as_neighbor_table(prop)
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
@@ -654,7 +723,7 @@ def train_epoch_churn(
         z1 = np.zeros(1, np.int32)
         gb = (z1, z1, z1, z1)
         byz_cap = 0
-    U, P, Q, losses, gps = _epoch_scan_churn(
+    out = _epoch_scan_churn(
         state.U, state.P, state.Q, nbr.idx, nbr.wgt,
         jnp.asarray(ui2), jnp.asarray(vj2),
         jnp.asarray(r[:n].reshape(shape)), jnp.asarray(conf2),
@@ -665,14 +734,18 @@ def train_epoch_churn(
         jnp.asarray(dp_seed, jnp.int32),
         jnp.asarray(amul), jnp.asarray(ashill), jnp.asarray(vjm), dirs,
         gb[0], gb[1], gb[2], gb[3],
-        cfg, use_ring, byz, use_attack, byz_cap,
+        cfg, use_ring, byz, use_attack, byz_cap, tele=tele,
     )
+    U, P, Q, losses, gps = out[:5]
     if use_ring:
         ring.write(t, gps.reshape(n, -1), ui2,
                    vjm if byz is not None else vj2, due)
     total = float(np.asarray(losses, dtype=np.float64).sum())
     realized = int(sender_on.sum())
-    return DMFState(U, P, Q), total / max(realized, 1)
+    l = total / max(realized, 1)
+    if tele:
+        return DMFState(U, P, Q), l, np.asarray(out[5])
+    return DMFState(U, P, Q), l
 
 
 def sample_with_negatives(
@@ -757,6 +830,7 @@ def train_epoch(
     cfg: DMFConfig,
     rng: np.random.Generator,
     accountant=None,
+    tele: bool = False,         # append the epoch's TELE_W device stats
 ) -> tuple[DMFState, float]:
     """Sparse-neighborhood scan epoch: one jitted dispatch for the whole
     epoch, O(B·S·K) propagation per batch. Passing a dense M converts it
@@ -774,7 +848,7 @@ def train_epoch(
     if cfg.n_shards > 1:
         from repro.sharding import dmf as sharded_dmf
         return sharded_dmf.train_epoch_sharded(
-            state, prop, train, cfg, rng, accountant=accountant)
+            state, prop, train, cfg, rng, accountant=accountant, tele=tele)
     nbr = _as_neighbor_table(prop)
     ui, vj, r, conf = sample_epoch(train, cfg, rng)
     B = cfg.batch_size
@@ -784,17 +858,21 @@ def train_epoch(
     _, dp_seed = epoch_dp_inputs(cfg, rng, n)
     if accountant is not None:
         accountant.observe_epoch(ui[:n].reshape(shape))
-    U, P, Q, losses = _epoch_scan(
+    out = _epoch_scan(
         state.U, state.P, state.Q, nbr.idx, nbr.wgt,
         jnp.asarray(ui[:n].reshape(shape)),
         jnp.asarray(vj[:n].reshape(shape)),
         jnp.asarray(r[:n].reshape(shape)),
         jnp.asarray(conf[:n].reshape(shape)),
         jnp.asarray(dp_seed, jnp.int32),
-        cfg,
+        cfg, tele=tele,
     )
+    U, P, Q, losses = out[:4]
     total = float(np.asarray(losses, dtype=np.float64).sum())
-    return DMFState(U, P, Q), total / max(n, 1)
+    l = total / max(n, 1)
+    if tele:
+        return DMFState(U, P, Q), l, np.asarray(out[4])
+    return DMFState(U, P, Q), l
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -820,6 +898,8 @@ class FitResult:
     privacy: dict | None = None   # accountant summary when cfg.dp (ε(δ) etc.)
     diverged_at: int | None = None  # epoch whose update went non-finite
                                     # (only set under on_nonfinite="halt")
+    telemetry: list | None = None   # per-epoch event dicts when
+                                    # fit(telemetry=True) (obs/telemetry.py)
 
 
 class DivergenceError(RuntimeError):
@@ -853,6 +933,9 @@ def fit(
     attack=None,
     defense=None,
     on_nonfinite: str = "warn",
+    telemetry: bool = False,
+    telemetry_out=None,
+    log_every: int = 0,
 ) -> FitResult:
     """Train `epochs` epochs of Alg. 1. `M` may be a dense (I, I) propagation
     matrix or a `graph.NeighborTable`; the sparse scan path is the default,
@@ -879,6 +962,18 @@ def fit(
     when ``churn`` is None); both None leaves every compiled program
     bit-exact with the defenseless stack.
 
+    Observability (obs/, DESIGN.md §14): ``telemetry=True`` (or a
+    ``telemetry_out`` JSONL path) collects one event dict per epoch —
+    loss, update norms, released/scattered message mass, message counts
+    per shard, DP ε-so-far, churn online count, delay-ring occupancy,
+    screening accept/reject — into `FitResult.telemetry`. The device
+    half is read-only reductions inside the same one-dispatch epoch (no
+    rng draws): factor trajectories are bit-identical with telemetry
+    off, which in turn compiles the exact uninstrumented program.
+    ``log_every=N`` logs a progress line every N epochs via
+    ``logging.getLogger("repro.dmf")`` (includes ε when DP is on); span
+    tracing is global — see `obs.trace.configure_tracing`.
+
     ``on_nonfinite`` — divergence sentinel: "warn" (default) emits a
     RuntimeWarning on a non-finite epoch loss and keeps going (the
     pre-existing numerics); "raise" raises `DivergenceError`; "halt"
@@ -886,6 +981,9 @@ def fit(
     `FitResult.diverged_at` to the offending epoch (that epoch's loss
     stays in `train_losses` as the evidence)."""
     assert on_nonfinite in ("warn", "raise", "halt"), on_nonfinite
+    tele_on = bool(telemetry) or telemetry_out is not None
+    assert not (tele_on and dense_reference), (
+        "telemetry rides the sparse/sharded epoch programs")
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     state = init_state(cfg, rng)
     accountant = None
@@ -946,6 +1044,16 @@ def fit(
     else:
         prop = _as_neighbor_table(M)
         epoch_fn = train_epoch
+    collector = None
+    if tele_on:
+        from repro.obs import telemetry as tele_lib
+        collector = tele_lib.EpochCollector(jsonl_path=telemetry_out,
+                                            n_shards=cfg.n_shards)
+    logger = None
+    if log_every:
+        import logging
+        logger = logging.getLogger("repro.dmf")
+    from repro.obs import trace as trace_lib
     tr_losses, te_losses = [], []
     start = 0
     if resume_from is not None:
@@ -961,15 +1069,23 @@ def fit(
             # copy must be taken up front (only paid in halt mode)
             prev = DMFState(jnp.copy(state.U), jnp.copy(state.P),
                             jnp.copy(state.Q))
-        if plan is not None:
-            state, l = train_epoch_churn(state, prop, train, cfg, rng, t,
-                                         plan, ring, accountant=accountant,
-                                         attack=attack_plan, byz=byz)
-        elif epoch_fn is train_epoch_dense:
-            state, l = epoch_fn(state, prop, train, cfg, rng)
+        t0 = time.perf_counter() if tele_on else 0.0
+        dstats = None
+        with trace_lib.span("fit.epoch", epoch=t):
+            if plan is not None:
+                out = train_epoch_churn(state, prop, train, cfg, rng, t,
+                                        plan, ring, accountant=accountant,
+                                        attack=attack_plan, byz=byz,
+                                        tele=tele_on)
+            elif epoch_fn is train_epoch_dense:
+                out = epoch_fn(state, prop, train, cfg, rng)
+            else:
+                out = epoch_fn(state, prop, train, cfg, rng,
+                               accountant=accountant, tele=tele_on)
+        if tele_on:
+            state, l, dstats = out
         else:
-            state, l = epoch_fn(state, prop, train, cfg, rng,
-                                accountant=accountant)
+            state, l = out
         tr_losses.append(l)
         if on_nonfinite == "warn":
             if not warned and not np.isfinite(l):
@@ -988,6 +1104,20 @@ def fit(
             break
         if test is not None:
             te_losses.append(test_loss(state, test))
+        if collector is not None:
+            collector.record(
+                t, train_loss=l, device_stats=dstats,
+                test_loss=te_losses[-1] if test is not None else None,
+                accountant=accountant, plan=plan, ring=ring, byz=byz,
+                wall_s=time.perf_counter() - t0)
+        if logger is not None and ((t + 1) % log_every == 0
+                                   or t == epochs - 1):
+            msg = f"epoch {t + 1}/{epochs} train_loss={l:.6f}"
+            if test is not None:
+                msg += f" test_loss={te_losses[-1]:.6f}"
+            if accountant is not None and accountant.eps_trajectory:
+                msg += f" eps={accountant.eps_trajectory[-1]:.4f}"
+            logger.info(msg)
         if callback is not None:
             callback(t, state, l)
         if (checkpoint_dir is not None and checkpoint_every > 0
@@ -1004,9 +1134,12 @@ def fit(
     if cfg.n_shards > 1 and not dense_reference:
         from repro.sharding import dmf as sharded_dmf
         state = sharded_dmf.unpad_state(state, cfg.n_users)
+    if collector is not None:
+        collector.close()
     return FitResult(state, tr_losses, te_losses,
                      privacy=accountant.summary() if accountant else None,
-                     diverged_at=diverged_at)
+                     diverged_at=diverged_at,
+                     telemetry=collector.events if collector else None)
 
 
 def evaluate(

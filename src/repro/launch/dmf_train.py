@@ -140,9 +140,34 @@ def main():
     ap.add_argument("--resume-from", default=None,
                     help="a step_<t> dir or checkpoint root: restore and "
                          "continue, bit-identical to the uninterrupted run")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-epoch training telemetry (obs/telemetry.py): "
+                         "loss, update/message norms, DP ε, online counts, "
+                         "ring occupancy, screening accepts — surfaced on "
+                         "FitResult.telemetry; factor trajectories stay "
+                         "bit-identical to a telemetry-off run")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="stream each epoch's telemetry event as one JSON "
+                         "line to this file (implies --telemetry)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing and write a Chrome-trace/"
+                         "Perfetto JSON here when the run finishes")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append a final metrics-registry snapshot (JSONL) "
+                         "here when the run finishes")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="log train/test loss (and ε so far) every N epochs "
+                         "via the `repro.dmf` stdlib logger (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     _ensure_host_devices(args.n_shards)
+    if args.log_every > 0:
+        import logging
+        logging.basicConfig(level=logging.INFO,
+                            format="%(asctime)s %(name)s %(message)s")
+    if args.trace_out:
+        from repro.obs import trace as trace_lib
+        trace_lib.configure_tracing(True)
     # import after the device flag is set: jax binds XLA_FLAGS at backend
     # init, which these imports may trigger (e.g. kernel warm paths)
     from repro.core import dmf, graph
@@ -248,7 +273,9 @@ def main():
                   checkpoint_every=args.checkpoint_every,
                   resume_from=args.resume_from,
                   attack=attack, defense=defense,
-                  on_nonfinite=args.on_nonfinite)
+                  on_nonfinite=args.on_nonfinite,
+                  telemetry=args.telemetry, telemetry_out=args.telemetry_out,
+                  log_every=args.log_every)
     if res.diverged_at is not None:
         print(f"training halted: diverged at epoch {res.diverged_at}")
     ev = dmf.evaluate(res.state, ds.train, ds.test, ds.n_users, ds.n_items,
@@ -257,6 +284,21 @@ def main():
         pv = dict(res.privacy)
         pv.pop("eps_trajectory", None)
         print("privacy " + json.dumps(pv))
+    if res.telemetry:
+        last = res.telemetry[-1]
+        print("telemetry " + json.dumps(
+            {k: last[k] for k in ("epoch", "train_loss", "n_messages")
+             if k in last}))
+    if args.trace_out:
+        from repro.obs import trace as trace_lib
+        trace_lib.get_tracer().export_chrome_trace(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({len(trace_lib.get_tracer().events())} events)")
+    if args.metrics_out:
+        from repro.obs import metrics as obs_metrics
+        obs_metrics.get_registry().write_jsonl(args.metrics_out,
+                                               event="dmf_train_final")
+        print(f"metrics snapshot appended to {args.metrics_out}")
     print(json.dumps({k: round(v, 4) for k, v in ev.items()}))
 
 

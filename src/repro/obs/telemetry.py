@@ -1,0 +1,135 @@
+"""Per-epoch training telemetry: fixed-shape device reductions +
+host-side assembly into `FitResult.telemetry` / a JSONL event stream.
+
+The device half lives inside the epoch programs (core/dmf.py,
+sharding/dmf.py): when their static ``tele`` flag is True, every
+minibatch step emits one ``TELE_W``-wide vector of read-only reductions
+over intermediates the step already computes — squared U/Q update
+norms, squared released-message mass, squared scattered-propagation
+mass, delivered-message counts, and Byzantine screening accept/reject
+counts. The scan sums them, so telemetry keeps the one-dispatch-per-
+epoch property and (critically) draws NO rng and writes NO factor —
+factor trajectories are bit-identical with telemetry off, at every
+shard count, DP/churn/byzantine included (tested).
+
+The host half (`EpochCollector`) merges those reductions with what only
+the host knows — the accountant's ε trajectory, the churn plan's online
+count, the delay ring's occupancy, wall-clock seconds — into one event
+dict per epoch, optionally streamed as JSONL and mirrored into the
+global metrics registry.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+# Slot layout of the per-step device reduction vector. Order is part of
+# the device<->host contract; append, never reorder.
+TELE_KEYS = (
+    "u_update_sq",     # Σ du²  over the batch (lr-scaled U delta)
+    "q_update_sq",     # Σ dq²  over the batch (lr-scaled Q delta)
+    "msg_sq",          # Σ gp²  over released (post-DP/post-attack) messages
+    "scatter_sq",      # Σ (θ·w·gp)² over every applied propagation slot
+    "n_messages",      # delivered neighbor-slot count (post fault gates)
+    "screen_accept",   # deliveries surviving the screen (byz path only)
+    "screen_reject",   # deliveries zeroed by the screen (byz path only)
+)
+TELE_W = len(TELE_KEYS)
+
+
+def device_stats_to_dict(tele) -> dict:
+    """(n_shards, TELE_W) — or (TELE_W,) single-device — reduction block
+    to named host floats. Norms are sqrt of the summed squares; counts
+    sum across shards but are also kept per shard (the "messages routed
+    per shard" view)."""
+    a = np.asarray(tele, np.float64)
+    if a.ndim == 1:
+        a = a[None, :]
+    assert a.shape[-1] == TELE_W, a.shape
+    tot = a.sum(axis=0)
+    return {
+        "u_update_norm": float(np.sqrt(tot[0])),
+        "q_update_norm": float(np.sqrt(tot[1])),
+        "p_msg_norm": float(np.sqrt(tot[2])),
+        "p_scatter_norm": float(np.sqrt(tot[3])),
+        "n_messages": int(tot[4]),
+        "messages_per_shard": [int(x) for x in a[:, 4]],
+        "screen_accept": int(tot[5]),
+        "screen_reject": int(tot[6]),
+    }
+
+
+class EpochCollector:
+    """Accumulates one event dict per training epoch.
+
+    ``jsonl_path`` streams each event as one JSON line as it lands (the
+    file is line-buffered so a crashed run keeps its prefix). Events are
+    also mirrored into the global `obs.metrics` registry (a handful of
+    dict ops per epoch — only paid when telemetry is on)."""
+
+    def __init__(self, jsonl_path=None, n_shards: int = 1,
+                 publish_metrics: bool = True):
+        self.events: list[dict] = []
+        self.n_shards = n_shards
+        self._file = open(jsonl_path, "a", buffering=1) if jsonl_path else None
+        self._publish = publish_metrics
+
+    def record(self, epoch: int, *, train_loss: float, device_stats=None,
+               test_loss=None, accountant=None, plan=None, ring=None,
+               byz=None, wall_s: float | None = None) -> dict:
+        ev: dict = {"epoch": int(epoch), "train_loss": float(train_loss)}
+        if test_loss is not None:
+            ev["test_loss"] = float(test_loss)
+        if wall_s is not None:
+            ev["wall_s"] = float(wall_s)
+        if device_stats is not None:
+            d = (device_stats if isinstance(device_stats, dict)
+                 else device_stats_to_dict(device_stats))
+            screening = byz is not None and getattr(byz, "screen", False)
+            if not screening:
+                # the zeros the non-byz trace emits are "not measured",
+                # not "nothing rejected" — don't report them as counts
+                d = {k: v for k, v in d.items()
+                     if k not in ("screen_accept", "screen_reject")}
+            ev.update(d)
+        if accountant is not None and accountant.eps_trajectory:
+            ev["dp_eps"] = float(accountant.eps_trajectory[-1])
+        if plan is not None:
+            ev["n_online"] = int(np.asarray(plan.online[epoch]).sum())
+        if ring is not None:
+            # messages still buffered for a later epoch after this one's
+            # deliveries and writes
+            ev["ring_occupancy"] = int((np.asarray(ring.due) > epoch).sum())
+        self.events.append(ev)
+        if self._file is not None:
+            self._file.write(json.dumps(ev) + "\n")
+        if self._publish:
+            self._publish_event(ev)
+        return ev
+
+    def _publish_event(self, ev: dict) -> None:
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.get_registry()
+        reg.counter("train_epochs_total").inc()
+        reg.gauge("train_loss").set(ev["train_loss"])
+        if "dp_eps" in ev:
+            reg.gauge("train_dp_eps").set(ev["dp_eps"])
+        if "n_online" in ev:
+            reg.gauge("train_online_learners").set(ev["n_online"])
+        if "ring_occupancy" in ev:
+            reg.gauge("train_ring_occupancy").set(ev["ring_occupancy"])
+        if "n_messages" in ev:
+            reg.counter("train_messages_total").inc(ev["n_messages"])
+            for s, c in enumerate(ev.get("messages_per_shard", ())):
+                reg.counter("train_messages_per_shard_total").inc(c, shard=s)
+        if "screen_accept" in ev:
+            reg.counter("train_screen_accept_total").inc(ev["screen_accept"])
+            reg.counter("train_screen_reject_total").inc(ev["screen_reject"])
+        if "wall_s" in ev:
+            reg.histogram("train_epoch_seconds").observe(ev["wall_s"])
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None

@@ -1,0 +1,216 @@
+"""Nestable span tracing with Chrome-trace/Perfetto export.
+
+A `Tracer` records wall-clock spans (monotonic `perf_counter_ns`,
+thread-safe, nesting tracked per thread) and exports them as the
+Chrome trace-event JSON that Perfetto / `chrome://tracing` load
+directly. The module-level tracer is DISABLED by default: `span()`
+then returns a shared null context manager — no allocation, no clock
+read — so instrumented hot paths cost nothing until someone calls
+`configure_tracing(True)` (the `--trace-out` CLI flag does).
+
+For the GPU pass (ROADMAP item 5) two bridges ride along:
+`Tracer.jax_profiler` wraps `jax.profiler.trace` (XLA-level timeline
+alongside these host-side spans), and `device_memory_snapshot()` grabs
+per-device `memory_stats()` where the backend exposes them.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import json
+import os
+import threading
+import time
+
+
+class _NullContext:
+    """Shared do-nothing context manager for the disabled-tracer path."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullContext()
+
+
+class _Span:
+    __slots__ = ("name", "t0_ns", "args", "depth", "parent")
+
+    def __init__(self, name, t0_ns, args, depth, parent):
+        self.name = name
+        self.t0_ns = t0_ns
+        self.args = args
+        self.depth = depth
+        self.parent = parent
+
+
+class Tracer:
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+        self._events: list[dict] = []   # completed chrome "X" events
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._t0_ns = time.perf_counter_ns()   # trace-relative origin
+
+    # -- recording ---------------------------------------------------------
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        """Time a block. Nesting is tracked per thread: the exported
+        event carries its depth and parent span name in ``args``."""
+        if not self.enabled:
+            yield None
+            return
+        stack = self._stack()
+        parent = stack[-1].name if stack else None
+        sp = _Span(name, time.perf_counter_ns(), args, len(stack), parent)
+        stack.append(sp)
+        try:
+            yield sp
+        finally:
+            stack.pop()
+            t1 = time.perf_counter_ns()
+            ev_args = {"depth": sp.depth}
+            if sp.parent is not None:
+                ev_args["parent"] = sp.parent
+            ev_args.update(sp.args)
+            ev = {
+                "name": name,
+                "ph": "X",
+                "ts": (sp.t0_ns - self._t0_ns) / 1e3,    # µs
+                "dur": (t1 - sp.t0_ns) / 1e3,            # µs
+                "pid": os.getpid(),
+                "tid": threading.get_ident(),
+                "args": ev_args,
+            }
+            with self._lock:
+                self._events.append(ev)
+
+    def traced(self, name: str | None = None):
+        """Decorator form of `span` (span name defaults to the function's
+        qualified name)."""
+        def deco(fn):
+            label = name or fn.__qualname__
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                with self.span(label):
+                    return fn(*a, **kw)
+            return wrapper
+        return deco
+
+    def instant(self, name: str, **args) -> None:
+        """Zero-duration marker event (chrome ``ph: "i"``)."""
+        if not self.enabled:
+            return
+        ev = {"name": name, "ph": "i", "s": "p",
+              "ts": (time.perf_counter_ns() - self._t0_ns) / 1e3,
+              "pid": os.getpid(), "tid": threading.get_ident(),
+              "args": dict(args)}
+        with self._lock:
+            self._events.append(ev)
+
+    # -- export ------------------------------------------------------------
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    def chrome_trace(self) -> dict:
+        """The Chrome trace-event document Perfetto loads as-is."""
+        return {"traceEvents": self.events(), "displayTimeUnit": "ms"}
+
+    def export_chrome_trace(self, path) -> dict:
+        doc = self.chrome_trace()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return doc
+
+    def span_stats(self) -> dict[str, dict]:
+        """Per-span-name aggregates over the recorded complete events:
+        ``{name: {count, total_s, mean_s, max_s}}`` — what the roofline
+        measured-timing path consumes."""
+        agg: dict[str, list[float]] = {}
+        for ev in self.events():
+            if ev.get("ph") == "X":
+                agg.setdefault(ev["name"], []).append(ev["dur"] / 1e6)
+        return {
+            name: {"count": len(d), "total_s": sum(d),
+                   "mean_s": sum(d) / len(d), "max_s": max(d)}
+            for name, d in sorted(agg.items())
+        }
+
+    # -- accelerator bridges ----------------------------------------------
+    @contextlib.contextmanager
+    def jax_profiler(self, logdir):
+        """Wrap a block in `jax.profiler.trace(logdir)` when the tracer
+        is enabled (no-op otherwise) — the XLA-level timeline for the GPU
+        pass, complementary to these host-side spans."""
+        if not self.enabled:
+            yield
+            return
+        import jax
+        with jax.profiler.trace(str(logdir)):
+            yield
+
+
+def device_memory_snapshot() -> list[dict]:
+    """Per-device `memory_stats()` where the backend exposes them (GPU/
+    TPU runtimes do; CPU returns an empty stats dict per device). Never
+    raises — observability must not take the job down."""
+    try:
+        import jax
+        out = []
+        for d in jax.local_devices():
+            stats = {}
+            try:
+                stats = d.memory_stats() or {}
+            except Exception:
+                pass
+            out.append({"device": str(d), "platform": d.platform,
+                        "memory_stats": {k: int(v) for k, v in stats.items()
+                                         if isinstance(v, (int, float))}})
+        return out
+    except Exception:
+        return []
+
+
+_GLOBAL = Tracer(enabled=False)
+
+
+def get_tracer() -> Tracer:
+    return _GLOBAL
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    global _GLOBAL
+    _GLOBAL = tracer
+    return tracer
+
+
+def configure_tracing(enabled: bool = True) -> Tracer:
+    """Flip the global tracer; returns it (fresh event buffer NOT
+    implied — call `clear()` for that)."""
+    _GLOBAL.enabled = enabled
+    return _GLOBAL
+
+
+def span(name: str, **args):
+    """Span on the global tracer — returns a shared null context (no
+    allocation) while tracing is disabled, so call sites in hot loops
+    stay free."""
+    if not _GLOBAL.enabled:
+        return _NULL
+    return _GLOBAL.span(name, **args)

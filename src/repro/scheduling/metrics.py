@@ -31,6 +31,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 # terminal request states
 SERVED = "served"
 REJECTED_QUEUE_FULL = "rejected_queue_full"   # waiting queue at capacity
@@ -75,11 +77,11 @@ class QueueGauge:
 
 
 def latency_percentiles(latencies_s, qs=(50, 95, 99)) -> dict[str, float]:
-    """{p50_ms, ...} over per-request latencies (seconds in, ms out)."""
-    lat = np.asarray(list(latencies_s), np.float64)
-    if lat.size == 0:
-        return {f"p{q}_ms": float("nan") for q in qs}
-    return {f"p{q}_ms": float(np.percentile(lat * 1e3, q)) for q in qs}
+    """{p50_ms, ...} over per-request latencies (seconds in, ms out).
+    Delegates to `repro.obs.metrics.latency_percentiles` — the single
+    repo-wide percentile definition (kept as a re-export here so existing
+    imports keep working)."""
+    return obs_metrics.latency_percentiles(latencies_s, qs)
 
 
 def summarize(records: list[RequestRecord],

@@ -43,6 +43,8 @@ import time
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as trace_lib
 from repro.scheduling import metrics as metrics_lib
 from repro.scheduling.metrics import (EXPIRED, REJECTED_DEADLINE,
                                       REJECTED_QUEUE_FULL, SERVED,
@@ -91,6 +93,29 @@ class SchedulerReport:
 
     def summary(self, slo_ms: float | None = None) -> dict:
         return metrics_lib.summarize(self.records, self.gauges, slo_ms)
+
+    def publish(self, registry=None, prefix: str = "scheduler",
+                slo_ms: float | None = None) -> dict:
+        """Mirror this report's summary into a metrics registry (the
+        global one by default); returns the summary dict it published.
+        Scalar rates/fractions land as gauges, terminal-state totals as
+        gauges too (a report is a finished run, not a live stream), and
+        the served-latency distribution replaces the
+        ``{prefix}_request_seconds`` histogram series."""
+        reg = registry if registry is not None else obs_metrics.get_registry()
+        s = self.summary(slo_ms)
+        for f in ("n_requests", "n_served", "n_rejected_queue_full",
+                  "n_rejected_deadline", "n_expired", "n_fallback",
+                  "rejected_frac", "expired_frac", "offered_load_rps",
+                  "goodput_rps", "slo_attainment"):
+            reg.gauge(f"{prefix}_{f}").set(s[f])
+        reg.gauge(f"{prefix}_n_ingest_windows").set(self.n_ingest_windows)
+        for k, v in s.get("queue", {}).items():   # QueueGauge aggregates
+            reg.gauge(f"{prefix}_queue_{k}").set(v)
+        h = reg.histogram(f"{prefix}_request_seconds")
+        h.reset()
+        h.observe_many(r.latency for r in self.served())
+        return s
 
 
 def _warm_refresh_jit(engine, ocfg) -> None:
@@ -181,8 +206,9 @@ class Scheduler:
 
     def _dispatch(self, d: int, take: list[RequestRecord], now: float,
                   n_ingested: int) -> float:
-        vals, idx, flags, dt = self.engine.serve_microbatch(
-            [r.user for r in take], return_flags=True)
+        with trace_lib.span("scheduler.dispatch", shard=d, n=len(take)):
+            vals, idx, flags, dt = self.engine.serve_microbatch(
+                [r.user for r in take], return_flags=True)
         if self._svc_est is None:
             self._svc_est = dt
         else:
@@ -230,7 +256,8 @@ class Scheduler:
         def run_ingest_window(at: float) -> float:
             ev = ingest_pending.pop(0)
             t0 = time.perf_counter()
-            ingest_reports.append(eng.ingest(np.asarray(ev), ocfg))
+            with trace_lib.span("scheduler.ingest_window", n_events=len(ev)):
+                ingest_reports.append(eng.ingest(np.asarray(ev), ocfg))
             din = time.perf_counter() - t0
             self._ingest_est = din if self._ingest_est is None else (
                 0.5 * din + 0.5 * self._ingest_est)

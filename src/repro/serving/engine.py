@@ -46,6 +46,8 @@ from repro.core import dmf
 from repro.core import graph as graph_lib
 from repro.core import metrics as metrics_lib
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as trace_lib
 from repro.serving import online as online_lib
 from repro.serving.candidates import CandidateIndex
 
@@ -83,18 +85,29 @@ class EngineStats:
         self.__dict__.update(dataclasses.asdict(EngineStats()))
 
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
-        """Request-level (arrival→completion) latency percentiles."""
-        if not self.request_seconds:
-            return {f"p{q}_ms": float("nan") for q in qs}
-        lat = np.asarray(self.request_seconds) * 1e3
-        return {f"p{q}_ms": float(np.percentile(lat, q)) for q in qs}
+        """Request-level (arrival→completion) latency percentiles —
+        delegates to the one definition in `obs.metrics`."""
+        return obs_metrics.latency_percentiles(self.request_seconds, qs)
 
     def dispatch_latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
         """Per-dispatch wall-time percentiles (diagnostic, NOT per-request)."""
-        if not self.dispatch_seconds:
-            return {f"p{q}_ms": float("nan") for q in qs}
-        lat = np.asarray(self.dispatch_seconds) * 1e3
-        return {f"p{q}_ms": float(np.percentile(lat, q)) for q in qs}
+        return obs_metrics.latency_percentiles(self.dispatch_seconds, qs)
+
+    def publish(self, registry=None, prefix: str = "serving") -> None:
+        """Mirror the local counters/latency streams into a metrics
+        registry (the global one by default). Counters export as gauges —
+        this object is the source of truth and may be `reset()`, so the
+        registry reflects its current totals rather than re-accumulating.
+        Latency streams replace the histogram's series wholesale for the
+        same reason."""
+        reg = registry if registry is not None else obs_metrics.get_registry()
+        for f in ("n_requests", "n_dispatches", "n_refreshes", "n_events",
+                  "n_fallbacks"):
+            reg.gauge(f"{prefix}_{f}").set(getattr(self, f))
+        for nm in ("dispatch_seconds", "request_seconds"):
+            h = reg.histogram(f"{prefix}_{nm}")
+            h.reset()
+            h.observe_many(getattr(self, nm))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
@@ -316,10 +329,11 @@ class ServingEngine:
         independent dispatch (`serve_microbatch`) is measured against."""
         D, R, k = self.cfg.n_shards, self.cfg.microbatch, self.cfg.k
         t0 = time.perf_counter()
-        vals, idx = self._dispatch_sh(
-            self._U_sh, self._V_sh, self._seen_sh, self._ub_sh,
-            self._bucket_items, jnp.asarray(uids_local))
-        jax.block_until_ready(idx)
+        with trace_lib.span("engine.serve_wave", shards=D, microbatch=R):
+            vals, idx = self._dispatch_sh(
+                self._U_sh, self._V_sh, self._seen_sh, self._ub_sh,
+                self._bucket_items, jnp.asarray(uids_local))
+            jax.block_until_ready(idx)
         dt = time.perf_counter() - t0
         self.stats.dispatch_seconds.append(dt)
         self.stats.n_dispatches += 1
@@ -420,16 +434,18 @@ class ServingEngine:
         for buf, n, arr in self._microbatches(user_ids, _t_arrival):
             uids = jnp.asarray(buf)
             t0 = time.perf_counter()
-            if self.cfg.prune:
-                vals, idx = _dispatch_pruned(
-                    self.state.U, self.V, self.seen,
-                    self._bucket_items, self._user_bucket, uids,
-                    k=self.cfg.k, interpret=self.cfg.interpret)
-            else:
-                vals, idx = _dispatch_dense(
-                    self.state.U, self.V, self.seen, uids,
-                    k=self.cfg.k, interpret=self.cfg.interpret)
-            jax.block_until_ready(idx)
+            with trace_lib.span("engine.dispatch", n_real=n,
+                                prune=self.cfg.prune):
+                if self.cfg.prune:
+                    vals, idx = _dispatch_pruned(
+                        self.state.U, self.V, self.seen,
+                        self._bucket_items, self._user_bucket, uids,
+                        k=self.cfg.k, interpret=self.cfg.interpret)
+                else:
+                    vals, idx = _dispatch_dense(
+                        self.state.U, self.V, self.seen, uids,
+                        k=self.cfg.k, interpret=self.cfg.interpret)
+                jax.block_until_ready(idx)
             t1 = time.perf_counter()
             self.stats.dispatch_seconds.append(t1 - t0)
             self.stats.n_dispatches += 1
@@ -464,11 +480,12 @@ class ServingEngine:
         buf[:n] = np.where(flags, 0, user_ids)
         buf[n:] = buf[0]           # pad with a real user id (results dropped)
         t0 = time.perf_counter()
-        vals, idx = _dispatch_rows(
-            self.state.U, self.state.P, self.state.Q, self.seen,
-            self._bucket_items, self._user_bucket, jnp.asarray(buf),
-            k=k, interpret=self.cfg.interpret, prune=self.cfg.prune)
-        jax.block_until_ready(idx)
+        with trace_lib.span("engine.serve_microbatch", n_real=n):
+            vals, idx = _dispatch_rows(
+                self.state.U, self.state.P, self.state.Q, self.seen,
+                self._bucket_items, self._user_bucket, jnp.asarray(buf),
+                k=k, interpret=self.cfg.interpret, prune=self.cfg.prune)
+            jax.block_until_ready(idx)
         dt = time.perf_counter() - t0
         self.stats.dispatch_seconds.append(dt)
         self.stats.request_seconds.extend([dt] * n)
@@ -540,9 +557,10 @@ class ServingEngine:
         assert self.nbr is not None and self.dmf_cfg is not None, (
             "engine built without nbr/dmf_cfg — online refresh unavailable")
         events = np.asarray(events)
-        self.state, report = online_lib.online_refresh(
-            self.state, self.nbr, events, self.dmf_cfg, ocfg,
-            rng if rng is not None else self._rng)
+        with trace_lib.span("engine.ingest", n_events=len(events)):
+            self.state, report = online_lib.online_refresh(
+                self.state, self.nbr, events, self.dmf_cfg, ocfg,
+                rng if rng is not None else self._rng)
         if not self._sharded and len(report.touched_users):
             t = jnp.asarray(report.touched_users)
             self.V = self.V.at[t].set(self.state.P[t] + self.state.Q[t])

@@ -314,22 +314,26 @@ class TiledServingEngine:
         arrays that ever leave the HBM-resident store are the (R, cap, K)
         windows of the requests in flight."""
         import jax
+
+        from repro.obs import trace as trace_lib
         st, k = self.store, self.cfg.k
-        cand = st.index.bucket_items[st.index.user_bucket[uids]]
-        u = st.U[uids]
-        sw = st.seen[uids]
-        if self.mode == "fp32":
-            vals, idx = ops.serve_topk_window(
-                u, st.slab[uids], cand, sw, k, interpret=self.cfg.interpret)
-        elif self.mode == "int8":
-            vals, idx = ops.serve_topk_window_quant(
-                u, st.q_codes[uids], st.q_scale[uids], cand, sw, k,
-                interpret=self.cfg.interpret)
-        else:
-            vals, idx = ops.serve_topk_window_quant(
-                u, st.slab_bf16[uids], np.ones(len(uids), np.float32),
-                cand, sw, k, interpret=self.cfg.interpret)
-        jax.block_until_ready(idx)
+        with trace_lib.span("tiled.dispatch", mode=self.mode):
+            cand = st.index.bucket_items[st.index.user_bucket[uids]]
+            u = st.U[uids]
+            sw = st.seen[uids]
+            if self.mode == "fp32":
+                vals, idx = ops.serve_topk_window(
+                    u, st.slab[uids], cand, sw, k,
+                    interpret=self.cfg.interpret)
+            elif self.mode == "int8":
+                vals, idx = ops.serve_topk_window_quant(
+                    u, st.q_codes[uids], st.q_scale[uids], cand, sw, k,
+                    interpret=self.cfg.interpret)
+            else:
+                vals, idx = ops.serve_topk_window_quant(
+                    u, st.slab_bf16[uids], np.ones(len(uids), np.float32),
+                    cand, sw, k, interpret=self.cfg.interpret)
+            jax.block_until_ready(idx)
         return np.asarray(vals), np.asarray(idx)
 
     def recommend(self, user_ids, return_flags: bool = False):

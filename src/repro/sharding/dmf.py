@@ -230,7 +230,8 @@ def build_outbox(gp, tbl_idx, tbl_wgt, vj):
 def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
                           cfg: dmf_lib.DMFConfig, prop_now=None,
                           online_local=None, byz=None, amul=None, ashill=None,
-                          dirs=None, vjm=None, bkt=None, byz_cap=0):
+                          dirs=None, vjm=None, bkt=None, byz_cap=0,
+                          tele=False):
     """One minibatch of Alg. 1 on one shard: local gathers + Eq. 9-11 via
     the SAME `dmf._step_deltas` as the single-device paths (the equivalence
     suite leans on that), local U/Q scatters, and the cross-shard P-gradient
@@ -264,7 +265,14 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     on the RECEIVING shard after the `all_to_all` (each shard defends
     itself), and robust-combined per (receiver, item) bucket when
     ``byz.aggregation != "sum"`` (``bkt`` the host-compiled per-shard
-    `MessageGroups` arrays in received-slot order)."""
+    `MessageGroups` arrays in received-slot order).
+
+    Telemetry (``tele``, static; obs/telemetry.py): when True a sixth
+    return value carries this shard's TELE_W read-only reductions —
+    message counts are RECEIVED deliveries (post fault gates), so each
+    shard's slot 4 is "messages routed to me" and the shard sum matches
+    the single-device delivery count. False (the default) traces none of
+    it — the compiled program is unchanged."""
     theta = cfg.lr
     if cfg.dp and cfg.mode != "ldmf":
         du, gp, dq, loss = dmf_lib._step_deltas_dp(
@@ -275,7 +283,14 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     U = U.at[ui].add(du)
     if cfg.mode != "gdmf":
         Q = Q.at[ui, vj].add(dq)
+    if tele:
+        z = jnp.zeros((), du.dtype)
+        u_sq = jnp.sum(du * du)
+        q_sq = jnp.sum(dq * dq) if cfg.mode != "gdmf" else z
     if cfg.mode == "ldmf":
+        if tele:   # purely local: nothing released, nothing scattered
+            return U, P, Q, loss, gp, jnp.stack(
+                [u_sq, q_sq, z, z, z, z, z])
         return U, P, Q, loss, gp
     if byz is None:
         # lines 11 + 13-15 across shards: gather the batch senders' rows of
@@ -296,6 +311,20 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
             rw = rw * online_local[ri]               # offline receivers get 0
         upd = rw[..., None] * rg[:, :, None, :]      # (D, B, S, K)
         P = P.at[ri, rv[:, :, None]].add(-theta * upd)
+        if tele:
+            me = jax.lax.axis_index(AXIS)
+            D = rw.shape[0]
+            # received self slots (source shard == me, receiver == sender)
+            # don't count as routed messages — matches the single-device
+            # neighbor-delivery count when summed over shards
+            selfr = ((jnp.arange(D)[:, None, None] == me)
+                     & (ri == ui[None, :, None])).astype(rw.dtype)
+            n_msgs = jnp.sum((rw * (1.0 - selfr) > 0).astype(rw.dtype))
+            gp2r = jnp.sum(rg * rg, axis=-1)         # (D, B)
+            scatter_sq = theta * theta * jnp.sum(
+                gp2r * jnp.sum(rw * rw, axis=-1))
+            return U, P, Q, loss, gp, jnp.stack(
+                [u_sq, q_sq, jnp.sum(gp * gp), scatter_sq, n_msgs, z, z])
         return U, P, Q, loss, gp
     from repro.robustness import byzantine as byz_lib
     K = gp.shape[-1]
@@ -322,6 +351,7 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
     rv = jax.lax.all_to_all(out_v, AXIS, 0, 0)       # (D, B)
     if online_local is not None:
         rw = rw * online_local[ri]
+    rw_pre = rw   # pre-screen delivery weights (telemetry baseline)
     if byz.screen:
         ok = byz_lib.screen_ok(rg, byz.norm_cap)     # (D, B)
         rg = jnp.where(ok[..., None] > 0, rg, 0.0)
@@ -337,6 +367,7 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
                         rw[..., None] * rg[:, :, None, :], 0.0)
     if byz.aggregation == "sum":
         P = P.at[ri, rv[:, :, None]].add(-theta * upd)
+        scat = upd
     else:
         b_id, b_pos, b_recv, b_item = bkt
         vals = upd.reshape(-1, K)                    # (D·B·S, K) recv order
@@ -345,13 +376,22 @@ def _sharded_batch_update(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, noise,
             vals, validity, b_id.reshape(-1), b_pos.reshape(-1),
             b_recv.shape[-1], byz_cap, byz)
         P = P.at[b_recv, b_item].add(-theta * comb)
+        scat = comb
+    if tele:
+        n_pre = jnp.sum((rw_pre > 0).astype(pw.dtype))   # attempted
+        n_post = jnp.sum((rw > 0).astype(pw.dtype))      # survived screen
+        self_sq = jnp.sum((w_self[:, None] * gp) ** 2)
+        scatter_sq = theta * theta * (self_sq + jnp.sum(scat * scat))
+        return U, P, Q, loss, gp_sent, jnp.stack(
+            [u_sq, q_sq, jnp.sum(gp_sent * gp_sent), scatter_sq,
+             n_pre, n_post, n_pre - n_post])
     return U, P, Q, loss, gp_sent
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(0, 1, 2))
+    jax.jit, static_argnames=("cfg", "mesh", "tele"), donate_argnums=(0, 1, 2))
 def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
-                   cfg, mesh):
+                   cfg, mesh, tele: bool = False):
     """A full epoch as ONE SPMD dispatch: shard_map over the learner axis,
     `lax.scan` over minibatches inside. Inputs: U (I_pad, K), P/Q
     (I_pad, J, K), tables (I_pad, D, S), batches (nb, D, Bs), plus the
@@ -380,21 +420,32 @@ def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
         def body(carry, batch):
             U, P, Q = carry
             b_ui, b_vj, b_r, b_conf, b_val, b_rid = batch
-            U, P, Q, loss, _ = _sharded_batch_update(
+            out = _sharded_batch_update(
                 U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
-                Z[b_rid] if noise_on else None, cfg)
+                Z[b_rid] if noise_on else None, cfg, tele=tele)
+            if tele:
+                U, P, Q, loss, _, tvec = out
+                return (U, P, Q), (loss, tvec)
+            U, P, Q, loss, _ = out
             return (U, P, Q), loss
 
-        (U, P, Q), losses = jax.lax.scan(
+        (U, P, Q), ys = jax.lax.scan(
             body, (U, P, Q), (ui, vj, r, conf, valid, rid))
-        return U, P, Q, losses[:, None]
+        if tele:
+            losses, tvecs = ys
+            # (1, TELE_W) per shard -> (D, TELE_W) at the out spec
+            return U, P, Q, losses[:, None], tvecs.sum(axis=0)[None]
+        return U, P, Q, ys[:, None]
 
+    out_specs = (P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS))
+    if tele:
+        out_specs += (P_(AXIS),)
     return shard_map(
         shard_body, mesh=mesh,
         in_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS),
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS), P_()),
-        out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS)),
+        out_specs=out_specs,
         check_vma=False,
     )(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed)
 
@@ -402,13 +453,14 @@ def _epoch_sharded(U, P, Q, pidx, pwgt, ui, vj, r, conf, valid, rid, dp_seed,
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "mesh", "use_ring", "byz", "use_attack",
-                     "byz_cap"),
+                     "byz_cap", "tele"),
     donate_argnums=(0, 1, 2))
 def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                          valid, rid, prop_now, online, ring_gp, ring_ui,
                          ring_vj, ring_deliver, dp_seed, amul, ashill, vjm,
                          dirs, b_id, b_pos, b_recv, b_item, cfg, mesh,
-                         use_ring, byz=None, use_attack=False, byz_cap=0):
+                         use_ring, byz=None, use_attack=False, byz_cap=0,
+                         tele: bool = False):
     """`_epoch_sharded` under a fault schedule — STILL one SPMD dispatch.
 
     Extra inputs: the fault gates (``prop_now`` routed like the batches,
@@ -493,16 +545,29 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                 i += 1
             if robust:
                 bkt = batch[i:i + 4]
-            U, P, Q, loss, gp = _sharded_batch_update(
+            out = _sharded_batch_update(
                 U, P, Q, pidx, pwgt, b_ui, b_vj, b_r, b_conf, b_val,
                 Z[b_rid] if noise_on else None, cfg,
                 prop_now=b_prop, online_local=online, byz=byz,
                 amul=b_amul, ashill=b_ashill,
                 dirs=dirs if use_attack else None, vjm=b_vjm, bkt=bkt,
-                byz_cap=byz_cap)
-            return (U, P, Q), ((loss, gp) if use_ring else loss)
+                byz_cap=byz_cap, tele=tele)
+            if tele:
+                U, P, Q, loss, gp, tvec = out
+            else:
+                U, P, Q, loss, gp = out
+            y = [loss]
+            if use_ring:
+                y.append(gp)
+            if tele:
+                y.append(tvec)
+            return (U, P, Q), (tuple(y) if len(y) > 1 else y[0])
 
         (U, P, Q), ys = jax.lax.scan(body, (U, P, Q), tuple(xs))
+        tvecs = None
+        if tele:
+            ys, tvecs = (ys[:-1], ys[-1])
+            ys = ys if use_ring else ys[0]
         if use_ring:
             losses, gps = ys
             # replicated released-message stream block for the delay ring:
@@ -514,8 +579,15 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
         else:
             losses = ys
             blk = jnp.zeros((1, K), jnp.float32)
-        return U, P, Q, losses[:, None], blk
+        ret = (U, P, Q, losses[:, None], blk)
+        if tele:
+            # (1, TELE_W) per shard -> (D, TELE_W) at the out spec
+            ret += (tvecs.sum(axis=0)[None],)
+        return ret
 
+    out_specs = (P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS), P_())
+    if tele:
+        out_specs += (P_(AXIS),)
     return shard_map(
         shard_body, mesh=mesh,
         in_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS), P_(AXIS),
@@ -527,7 +599,7 @@ def _epoch_sharded_churn(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf,
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS), P_(AXIS),
                   P_(None, AXIS), P_(None, AXIS), P_(None, AXIS),
                   P_(None, AXIS)),
-        out_specs=(P_(AXIS), P_(AXIS), P_(AXIS), P_(None, AXIS), P_()),
+        out_specs=out_specs,
         check_vma=False,
     )(U, P, Q, pidx, pwgt, dpidx, dpwgt, ui, vj, r, conf, valid, rid,
       prop_now, online, ring_gp, ring_ui, ring_vj, ring_deliver, dp_seed,
@@ -546,6 +618,7 @@ def train_epoch_churn_sharded(
     accountant=None,
     attack=None,                # robustness.byzantine.AttackPlan | None
     byz=None,                   # robustness.byzantine.DefenseConfig | None
+    tele: bool = False,         # append the (n_shards, TELE_W) device stats
 ) -> tuple[dmf_lib.DMFState, float]:
     """Sharded counterpart of `dmf.train_epoch_churn`: the same sampled
     stream and fault gates (host-side, shard-count-independent), rows and
@@ -626,7 +699,7 @@ def train_epoch_churn_sharded(
         gb = (z3, z3, z3, z3)
         byz_cap = 0
     st = shard_state(state, plan)
-    U, Pm, Q, losses, blk = _epoch_sharded_churn(
+    out = _epoch_sharded_churn(
         st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
         plan.part.idx, plan.part.wgt,
         jnp.asarray(ui_l), jnp.asarray(vj_s), jnp.asarray(r_s),
@@ -636,12 +709,16 @@ def train_epoch_churn_sharded(
         jnp.asarray(dp_seed, jnp.int32),
         jnp.asarray(amul), jnp.asarray(ashill), jnp.asarray(vjm), dirs,
         gb[0], gb[1], gb[2], gb[3],
-        cfg, plan.mesh, use_ring, byz, use_attack, byz_cap)
+        cfg, plan.mesh, use_ring, byz, use_attack, byz_cap, tele=tele)
+    U, Pm, Q, losses, blk = out[:5]
     if use_ring:
         ring.write(t, blk, ui2, vjm_g if byz is not None else vj2, due)
     total = float(np.asarray(losses, dtype=np.float64).sum())
     realized = int(sender_on.sum())
-    return dmf_lib.DMFState(U, Pm, Q), total / max(realized, 1)
+    l = total / max(realized, 1)
+    if tele:
+        return dmf_lib.DMFState(U, Pm, Q), l, np.asarray(out[5])
+    return dmf_lib.DMFState(U, Pm, Q), l
 
 
 def _as_plan(prop, cfg: dmf_lib.DMFConfig) -> ShardPlan:
@@ -672,6 +749,7 @@ def train_epoch_sharded(
     cfg: dmf_lib.DMFConfig,
     rng: np.random.Generator,
     accountant=None,
+    tele: bool = False,         # append the (n_shards, TELE_W) device stats
 ) -> tuple[dmf_lib.DMFState, float]:
     """Sharded counterpart of `dmf.train_epoch`: identical minibatch stream
     (same rng consumption — the per-epoch DP seed draw included, so DP-on
@@ -695,13 +773,17 @@ def train_epoch_sharded(
         r[:n].reshape(shape), conf[:n].reshape(shape),
         cfg.n_shards, plan.rows)
     st = shard_state(state, plan)
-    U, Pm, Q, losses = _epoch_sharded(
+    out = _epoch_sharded(
         st.U, st.P, st.Q, plan.part.idx, plan.part.wgt,
         jnp.asarray(ui_l), jnp.asarray(vj_s), jnp.asarray(r_s),
         jnp.asarray(conf_s), jnp.asarray(valid), jnp.asarray(rid),
-        jnp.asarray(dp_seed, jnp.int32), cfg, plan.mesh)
+        jnp.asarray(dp_seed, jnp.int32), cfg, plan.mesh, tele=tele)
+    U, Pm, Q, losses = out[:4]
     total = float(np.asarray(losses, dtype=np.float64).sum())
-    return dmf_lib.DMFState(U, Pm, Q), total / max(n, 1)
+    l = total / max(n, 1)
+    if tele:
+        return dmf_lib.DMFState(U, Pm, Q), l, np.asarray(out[4])
+    return dmf_lib.DMFState(U, Pm, Q), l
 
 
 # ---------------------------------------------------------------------------

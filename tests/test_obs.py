@@ -1,0 +1,485 @@
+"""Unified observability layer (src/repro/obs/, DESIGN.md §14).
+
+The load-bearing guarantee tested here is the off-is-dead-code /
+reductions-only contract: telemetry and tracing change NOTHING about
+training — factor trajectories are bit-identical with the full
+DP + churn + byzantine stack on, at every shard count. Plus the unit
+surface: registry label semantics, the single percentile definition,
+span nesting/export schema, the bench-regression gate, and the
+roofline's measured-trace rows.
+"""
+import dataclasses
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core import dmf, graph
+from repro.data import synthetic_poi
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as trace_lib
+from repro.obs.telemetry import TELE_KEYS, TELE_W, device_stats_to_dict
+from repro.robustness import ChurnConfig
+from repro.robustness.byzantine import AttackConfig, DefenseConfig
+
+EPOCHS = 4
+
+
+# ---------------------------------------------------------------------------
+# shared world (same scale as tests/test_byzantine.py)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    ds = synthetic_poi.generate(synthetic_poi.POIDatasetConfig(
+        n_users=80, n_items=50, n_ratings=600, n_cities=4, seed=0))
+    gcfg = graph.GraphConfig(n_neighbors=2, walk_length=3)
+    W = graph.build_adjacency(ds.user_coords, ds.user_city, gcfg)
+    nbr = graph.walk_neighbor_table(W, gcfg)
+    return ds, nbr
+
+
+def _cfg(ds, **kw):
+    base = dict(n_users=ds.n_users, n_items=ds.n_items, dim=6,
+                batch_size=64, beta=0.1, gamma=0.01)
+    base.update(kw)
+    return dmf.DMFConfig(**base)
+
+
+def _full_stack_kwargs(ds):
+    """DP + churn + byzantine-with-screening, the hardest telemetry path."""
+    return dict(
+        epochs=EPOCHS, test=ds.test,
+        churn=ChurnConfig(dropout=0.2, delay_classes=(0, 1), seed=4),
+        attack=AttackConfig(family="sign_flip", frac=0.2, seed=5),
+        defense=DefenseConfig(screen=True, norm_cap=2.0))
+
+
+def _assert_states_equal(a, b):
+    for nm in ("U", "P", "Q"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, nm)), np.asarray(getattr(b, nm)),
+            err_msg=f"{nm} diverged")
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_counter_labels_order_insensitive(self):
+        reg = obs_metrics.MetricsRegistry()
+        c = reg.counter("msgs")
+        c.inc(2, shard=0, path="dense")
+        c.inc(3, path="dense", shard=0)
+        assert c.value(shard=0, path="dense") == 5.0
+        assert c.value(path="dense", shard=0) == 5.0
+        assert c.value(shard=1, path="dense") == 0.0
+
+    def test_counter_negative_raises(self):
+        reg = obs_metrics.MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("c").inc(-1)
+
+    def test_registration_idempotent_kind_clash_raises(self):
+        reg = obs_metrics.MetricsRegistry()
+        assert reg.gauge("g") is reg.gauge("g")
+        with pytest.raises(ValueError):
+            reg.counter("g")
+
+    def test_gauge_set_overwrites(self):
+        reg = obs_metrics.MetricsRegistry()
+        g = reg.gauge("loss")
+        g.set(1.0)
+        g.set(0.5)
+        assert g.value() == 0.5
+        assert np.isnan(g.value(shard=9))
+
+    def test_histogram_snapshot_stats(self):
+        reg = obs_metrics.MetricsRegistry()
+        h = reg.histogram("lat")
+        h.observe_many([0.1, 0.2, 0.3, 0.4], shard=0)
+        snap = reg.snapshot()["lat"]
+        assert snap["kind"] == "histogram"
+        s = snap["values"]["shard=0"]
+        assert s["count"] == 4
+        assert s["min"] == pytest.approx(0.1)
+        assert s["max"] == pytest.approx(0.4)
+        assert s["mean"] == pytest.approx(0.25)
+        assert s["p50"] == pytest.approx(0.25)
+
+    def test_write_jsonl(self, tmp_path):
+        reg = obs_metrics.MetricsRegistry()
+        reg.counter("c").inc(7)
+        p = tmp_path / "m.jsonl"
+        reg.write_jsonl(p, event="e1")
+        reg.write_jsonl(p, event="e2")
+        lines = [json.loads(l) for l in p.read_text().splitlines()]
+        assert [l["event"] for l in lines] == ["e1", "e2"]
+        assert lines[0]["metrics"]["c"]["values"][""] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# one percentile definition everywhere (satellite 1)
+# ---------------------------------------------------------------------------
+class TestPercentileDedup:
+    FIXTURE = [0.010, 0.020, 0.030, 0.050, 0.080, 0.130, 0.210, 0.340]
+
+    def test_three_call_sites_pinned_equal(self):
+        from repro.scheduling import metrics as sched_metrics
+        from repro.serving.engine import EngineStats
+
+        want = obs_metrics.latency_percentiles(self.FIXTURE)
+        # pinned ground truth so every implementation must match it, not
+        # just each other
+        assert want["p50_ms"] == pytest.approx(
+            float(np.percentile(np.asarray(self.FIXTURE) * 1e3, 50)))
+        assert sched_metrics.latency_percentiles(self.FIXTURE) == want
+        st = EngineStats(request_seconds=list(self.FIXTURE),
+                         dispatch_seconds=list(self.FIXTURE))
+        assert st.latency_percentiles() == want
+        assert st.dispatch_latency_percentiles() == want
+        # histograms share it too
+        h = obs_metrics.MetricsRegistry().histogram("h")
+        h.observe_many(self.FIXTURE)
+        assert h.percentiles() == want
+
+    def test_generator_input_and_empty(self):
+        gen = (x for x in self.FIXTURE)
+        assert (obs_metrics.latency_percentiles(gen)
+                == obs_metrics.latency_percentiles(self.FIXTURE))
+        empty = obs_metrics.latency_percentiles(())
+        assert set(empty) == {"p50_ms", "p95_ms", "p99_ms"}
+        assert all(np.isnan(v) for v in empty.values())
+
+
+# ---------------------------------------------------------------------------
+# span tracing
+# ---------------------------------------------------------------------------
+class TestTrace:
+    def test_nesting_depth_and_parent(self):
+        tr = trace_lib.Tracer(enabled=True)
+        with tr.span("outer"):
+            with tr.span("inner", item=3):
+                pass
+        evs = {e["name"]: e for e in tr.events()}
+        assert evs["outer"]["args"]["depth"] == 0
+        assert "parent" not in evs["outer"]["args"]
+        assert evs["inner"]["args"] == {
+            "depth": 1, "parent": "outer", "item": 3}
+        # inner completes first, fits inside outer
+        assert evs["inner"]["dur"] <= evs["outer"]["dur"]
+
+    def test_chrome_trace_schema_and_json_valid(self, tmp_path):
+        tr = trace_lib.Tracer(enabled=True)
+        with tr.span("a"):
+            pass
+        tr.instant("marker", section="x")
+        p = tmp_path / "trace.json"
+        tr.export_chrome_trace(p)
+        doc = json.loads(p.read_text())     # valid JSON round-trip
+        assert doc["displayTimeUnit"] == "ms"
+        x = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]
+        for key in ("name", "ph", "ts", "dur", "pid", "tid", "args"):
+            assert key in x
+        i = [e for e in doc["traceEvents"] if e["ph"] == "i"][0]
+        assert i["args"] == {"section": "x"}
+
+    def test_decorator_and_span_stats(self):
+        tr = trace_lib.Tracer(enabled=True)
+
+        @tr.traced("work")
+        def f(x):
+            return x + 1
+
+        assert f(1) == 2
+        assert f(2) == 3
+        st = tr.span_stats()["work"]
+        assert st["count"] == 2
+        assert st["total_s"] >= st["max_s"] >= st["mean_s"] > 0
+
+    def test_disabled_records_nothing_and_is_null_context(self):
+        tr = trace_lib.Tracer(enabled=False)
+        with tr.span("x"):
+            pass
+        tr.instant("y")
+        assert tr.events() == []
+        # module-level span: shared null context while the global tracer
+        # is off — the zero-cost hot-path guarantee
+        assert not trace_lib.get_tracer().enabled
+        assert trace_lib.span("anything") is trace_lib._NULL
+
+    def test_configure_global(self):
+        tracer = trace_lib.configure_tracing(True)
+        try:
+            with trace_lib.span("global-span"):
+                pass
+            assert any(e["name"] == "global-span" for e in tracer.events())
+        finally:
+            trace_lib.configure_tracing(False)
+            tracer.clear()
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the bit-exactness contract
+# ---------------------------------------------------------------------------
+class TestTelemetryBitExact:
+    def test_single_device_full_stack(self, world):
+        ds, nbr = world
+        cfg = _cfg(ds, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        kw = _full_stack_kwargs(ds)
+        off = dmf.fit(cfg, ds.train, nbr, **kw)
+        on = dmf.fit(cfg, ds.train, nbr, telemetry=True, **kw)
+        _assert_states_equal(off.state, on.state)
+        assert off.train_losses == on.train_losses
+        assert off.test_losses == on.test_losses
+        assert off.telemetry is None
+        assert len(on.telemetry) == EPOCHS
+
+    def test_single_device_plain(self, world):
+        ds, nbr = world
+        cfg = _cfg(ds)
+        off = dmf.fit(cfg, ds.train, nbr, epochs=3)
+        on = dmf.fit(cfg, ds.train, nbr, epochs=3, telemetry=True)
+        _assert_states_equal(off.state, on.state)
+        assert off.train_losses == on.train_losses
+
+    @pytest.mark.sharded
+    @pytest.mark.parametrize("n_shards", [2, 4, 8])
+    def test_sharded_full_stack(self, world, n_shards):
+        ds, nbr = world
+        cfg = _cfg(ds, n_shards=n_shards,
+                   dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        kw = _full_stack_kwargs(ds)
+        off = dmf.fit(cfg, ds.train, nbr, **kw)
+        on = dmf.fit(cfg, ds.train, nbr, telemetry=True, **kw)
+        _assert_states_equal(off.state, on.state)
+        assert off.train_losses == on.train_losses
+        ev = on.telemetry[0]
+        assert len(ev["messages_per_shard"]) == n_shards
+        assert sum(ev["messages_per_shard"]) == ev["n_messages"]
+
+    @pytest.mark.sharded
+    def test_sharded_no_byz_path(self, world):
+        ds, nbr = world
+        cfg = _cfg(ds, n_shards=2, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        kw = dict(epochs=3, test=ds.test,
+                  churn=ChurnConfig(dropout=0.2, delay_classes=(0, 1),
+                                    seed=4))
+        off = dmf.fit(cfg, ds.train, nbr, **kw)
+        on = dmf.fit(cfg, ds.train, nbr, telemetry=True, **kw)
+        _assert_states_equal(off.state, on.state)
+        assert off.train_losses == on.train_losses
+
+    @pytest.mark.sharded
+    def test_message_count_shard_invariant(self, world):
+        """Delivered-message counts are a property of the fault schedule,
+        not the partitioning — identical at every shard count."""
+        ds, nbr = world
+        kw = _full_stack_kwargs(ds)
+        counts = {}
+        for ns in (1, 2, 4):
+            cfg = _cfg(ds, n_shards=ns, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+            res = dmf.fit(cfg, ds.train, nbr, telemetry=True, **kw)
+            counts[ns] = [ev["n_messages"] for ev in res.telemetry]
+        assert counts[1] == counts[2] == counts[4]
+
+
+class TestTelemetryContent:
+    def test_event_fields_full_stack(self, world, tmp_path):
+        ds, nbr = world
+        cfg = _cfg(ds, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        out = tmp_path / "tele.jsonl"
+        res = dmf.fit(cfg, ds.train, nbr, telemetry_out=out,
+                      **_full_stack_kwargs(ds))
+        assert len(res.telemetry) == EPOCHS
+        eps = [ev["dp_eps"] for ev in res.telemetry]
+        assert eps == sorted(eps) and eps[0] > 0
+        for t, ev in enumerate(res.telemetry):
+            assert ev["epoch"] == t
+            assert 0 < ev["n_online"] <= ds.n_users
+            assert ev["ring_occupancy"] >= 0
+            assert ev["screen_accept"] + ev["screen_reject"] >= 0
+            assert ev["n_messages"] == ev["messages_per_shard"][0]
+            assert np.isfinite(ev["train_loss"])
+            assert np.isfinite(ev["test_loss"])
+            assert ev["wall_s"] > 0
+        # the JSONL stream carries exactly the in-memory events
+        lines = [json.loads(l) for l in out.read_text().splitlines()]
+        assert lines == res.telemetry
+
+    def test_screen_counts_absent_without_byz(self, world):
+        ds, nbr = world
+        cfg = _cfg(ds, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        res = dmf.fit(cfg, ds.train, nbr, epochs=2, telemetry=True,
+                      churn=ChurnConfig(dropout=0.2, seed=4))
+        for ev in res.telemetry:
+            assert "screen_accept" not in ev
+            assert "screen_reject" not in ev
+            assert "n_messages" in ev
+
+    def test_device_stats_to_dict_shapes(self):
+        one = np.arange(TELE_W, dtype=np.float64)
+        d1 = device_stats_to_dict(one)
+        d2 = device_stats_to_dict(np.stack([one, one]))
+        assert d1["u_update_norm"] == pytest.approx(0.0)
+        assert d2["n_messages"] == 2 * d1["n_messages"]
+        assert d2["messages_per_shard"] == [int(one[4])] * 2
+        assert len(TELE_KEYS) == TELE_W
+
+    def test_log_every(self, world, caplog):
+        ds, nbr = world
+        cfg = _cfg(ds, dp_sigma=0.3, dp_clip=1.0, dp_seed=3)
+        with caplog.at_level(logging.INFO, logger="repro.dmf"):
+            dmf.fit(cfg, ds.train, nbr, epochs=3, test=ds.test, log_every=1)
+        msgs = [r.message for r in caplog.records
+                if r.name == "repro.dmf"]
+        assert len(msgs) == 3
+        assert "epoch 1/3" in msgs[0]
+        assert "train_loss=" in msgs[0]
+        assert "eps=" in msgs[0]       # DP is on → ε-so-far in the line
+
+
+# ---------------------------------------------------------------------------
+# publish() bridges
+# ---------------------------------------------------------------------------
+class TestPublish:
+    def test_engine_stats_publish(self):
+        from repro.serving.engine import EngineStats
+        reg = obs_metrics.MetricsRegistry()
+        st = EngineStats(n_requests=10, n_dispatches=2,
+                         dispatch_seconds=[0.1, 0.2],
+                         request_seconds=[0.1] * 10)
+        st.publish(registry=reg)
+        assert reg.gauge("serving_n_requests").value() == 10
+        assert reg.histogram("serving_dispatch_seconds").values() == [0.1, 0.2]
+        # re-publish replaces, not re-accumulates
+        st.publish(registry=reg)
+        assert reg.histogram("serving_request_seconds").values() == [0.1] * 10
+
+    def test_scheduler_report_publish(self):
+        from repro.scheduling.metrics import SERVED, RequestRecord
+        from repro.scheduling.scheduler import SchedulerReport
+        reg = obs_metrics.MetricsRegistry()
+        recs = [RequestRecord(rid=i, user=i, shard=0, arrival=0.0,
+                              deadline=1.0, status=SERVED,
+                              completion=0.05 * (i + 1))
+                for i in range(4)]
+        rep = SchedulerReport(records=recs, gauges=[],
+                              n_dispatches_per_shard=[4],
+                              ingest_intervals=[], ingest_reports=[])
+        s = rep.publish(registry=reg)
+        assert s["n_served"] == 4
+        assert reg.gauge("scheduler_n_served").value() == 4.0
+        assert reg.gauge("scheduler_slo_attainment").value() == 1.0
+        assert len(reg.histogram("scheduler_request_seconds").values()) == 4
+
+
+# ---------------------------------------------------------------------------
+# bench-regression gate (benchmarks/compare.py)
+# ---------------------------------------------------------------------------
+class TestCompare:
+    BASE = {"epochs_per_sec": {"sparse_scan": 100.0},
+            "latency_ms": {"p99_ms": 10.0},
+            "config": {"n_users": 80},
+            "overhead_vs_base": -0.01}
+
+    def _dirs(self, tmp_path, fresh):
+        b, f = tmp_path / "base", tmp_path / "fresh"
+        b.mkdir()
+        f.mkdir()
+        (b / "BENCH_x.json").write_text(json.dumps(self.BASE))
+        (f / "BENCH_x.json").write_text(json.dumps(fresh))
+        return b, f
+
+    def test_identical_passes(self, tmp_path, capsys):
+        from benchmarks import compare
+        b, f = self._dirs(tmp_path, self.BASE)
+        rc = compare.main(["--baseline-dir", str(b), "--fresh-dir", str(f)])
+        assert rc == 0
+        assert "0 regressed" in capsys.readouterr().out
+
+    def test_throughput_drop_fails(self, tmp_path, capsys):
+        from benchmarks import compare
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["epochs_per_sec"]["sparse_scan"] = 50.0       # -50% < -25%
+        b, f = self._dirs(tmp_path, fresh)
+        rc = compare.main(["--baseline-dir", str(b), "--fresh-dir", str(f)])
+        assert rc == 1
+        assert "REGRESSED" in capsys.readouterr().out
+
+    def test_latency_rise_fails_and_threshold_loosens(self, tmp_path):
+        from benchmarks import compare
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["latency_ms"]["p99_ms"] = 14.0                # +40%
+        b, f = self._dirs(tmp_path, fresh)
+        assert compare.main(
+            ["--baseline-dir", str(b), "--fresh-dir", str(f)]) == 1
+        assert compare.main(
+            ["--baseline-dir", str(b), "--fresh-dir", str(f),
+             "--threshold", "0.5"]) == 0
+
+    def test_untracked_and_negative_leaves_do_not_gate(self, tmp_path):
+        from benchmarks import compare
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["config"]["n_users"] = 9999     # untracked config echo
+        fresh["overhead_vs_base"] = -0.0125   # negative baseline, tiny move
+        b, f = self._dirs(tmp_path, fresh)
+        assert compare.main(
+            ["--baseline-dir", str(b), "--fresh-dir", str(f)]) == 0
+
+    def test_nothing_to_compare(self, tmp_path):
+        from benchmarks import compare
+        (tmp_path / "b").mkdir()
+        (tmp_path / "f").mkdir()
+        assert compare.main(["--baseline-dir", str(tmp_path / "b"),
+                             "--fresh-dir", str(tmp_path / "f")]) == 2
+
+    def test_committed_baselines_pass(self):
+        """The gate must be green on the repo's own committed artifacts
+        (fresh mirror == baseline by construction of save_json)."""
+        from benchmarks import compare
+        rows, _ = compare.run()
+        assert rows, "no BENCH_* baselines found"
+        bad = [r for r in rows if r["regressed"]]
+        assert not bad, bad
+
+
+# ---------------------------------------------------------------------------
+# roofline measured-trace rows
+# ---------------------------------------------------------------------------
+class TestRooflineMeasured:
+    def test_measured_rows_from_trace(self, tmp_path):
+        from benchmarks import roofline
+        tr = trace_lib.Tracer(enabled=True)
+        with tr.span("fit.epoch"):
+            pass
+        with tr.span("fit.epoch"):
+            pass
+        p = tmp_path / "trace.json"
+        tr.export_chrome_trace(p)
+        rows = roofline.measured_rows(p)
+        assert len(rows) == 1
+        r = rows[0]
+        assert r["arch"] == "measured"
+        assert r["shape"] == "fit.epoch"
+        assert r["span_count"] == 2
+        assert r["collective_source"] == "measured_trace"
+        assert r["timing_source"] == "measured"
+        assert r["t_compute_s"] > 0
+        # run.py's roofline printer needs these keys on every row
+        for key in ("t_compute_s", "t_memory_s", "t_collective_s",
+                    "dominant", "useful_ratio", "collective_source"):
+            assert key in r
+
+    def test_missing_or_garbage_trace_is_empty(self, tmp_path):
+        from benchmarks import roofline
+        assert roofline.measured_rows(tmp_path / "nope.json") == []
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert roofline.measured_rows(bad) == []
+
+    def test_analytic_fallback_still_present(self, tmp_path):
+        from benchmarks import roofline
+        rows = roofline.main(trace_path=tmp_path / "nope.json")
+        assert rows
+        assert all(r.get("timing_source") != "measured" for r in rows)
